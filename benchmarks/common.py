@@ -1,0 +1,145 @@
+"""Shared benchmark scaffolding: dataset/workload construction at bench
+scale, layout builders for every approach (paper Sec 7.3), result I/O."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.baselines import bottom_up, partitioners
+from repro.core import greedy, rewards
+from repro.core.woodblock.agent import WoodblockConfig, build_woodblock
+from repro.data import datagen, workload as wl
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+# bench scale: sized so the full suite runs in minutes on one CPU core;
+# --full multiplies rows ×10 (closer to the paper's 77–100M-row scale)
+SCALES = {
+    "tpch": dict(rows=60_000, min_block=600, n_per_template=10),
+    "errorlog_int": dict(rows=60_000, min_block=300, n_queries=200),
+    "errorlog_ext": dict(rows=60_000, min_block=300, n_queries=200),
+}
+
+
+def load_workload(name: str, scale: float = 1.0, seed: int = 0):
+    p = SCALES[name]
+    rows = int(p["rows"] * scale)
+    if name == "tpch":
+        schema, records = datagen.make_tpch_like(rows, seed=seed)
+        work, labels = wl.make_tpch_workload(
+            schema, n_per_template=p["n_per_template"], seed=seed
+        )
+        cuts = work.candidate_cuts(max_adv=8)
+    elif name == "errorlog_int":
+        schema, records = datagen.make_errorlog_int(rows, seed=seed)
+        work, labels = wl.make_errorlog_int_workload(
+            schema, n_queries=p["n_queries"], seed=seed
+        )
+        cuts = work.candidate_cuts()
+    else:
+        schema, records = datagen.make_errorlog_ext(rows, seed=seed)
+        work, labels = wl.make_errorlog_ext_workload(
+            schema, n_queries=p["n_queries"], seed=seed
+        )
+        cuts = work.candidate_cuts()
+    min_block = max(int(p["min_block"] * scale), 50)
+    return schema, records, work, labels, cuts, min_block
+
+
+def scanned_fraction_of(tree, bids, records, work, cuts):
+    sizes = np.bincount(bids, minlength=tree.n_leaves).astype(np.int64)
+    hits = rewards.block_query_hits(tree, work.tensorize(cuts))
+    return float(
+        (hits * sizes[:, None]).sum() / (records.shape[0] * len(work))
+    ), hits, sizes
+
+
+def build_layouts(name, schema, records, work, cuts, min_block,
+                  which=("baseline", "bottom_up", "greedy", "woodblock"),
+                  rl_iters=20, seed=0):
+    """→ {approach: dict(tree, bids, scanned, build_s)}."""
+    out = {}
+    if "baseline" in which:
+        t0 = time.perf_counter()
+        if name == "tpch":
+            tree, bids = partitioners.random_layout(
+                records, schema, cuts, min_block, seed=seed
+            )
+        else:  # ErrorLog default: range partition on ingest time
+            tree, bids = partitioners.range_layout(
+                records, schema, cuts, min_block, column=0
+            )
+        frac, _, _ = scanned_fraction_of(tree, bids, records, work, cuts)
+        out["baseline"] = dict(
+            tree=tree, bids=bids, scanned=frac,
+            build_s=time.perf_counter() - t0,
+        )
+    if "bottom_up" in which:
+        t0 = time.perf_counter()
+        ceiling = None if name == "tpch" else 0.10  # BU+ tuning (Sec 7.5)
+        tree, bids = bottom_up.build_bottom_up(
+            records, work, cuts,
+            bottom_up.BottomUpConfig(
+                block_size=min_block, max_features=15,
+                selectivity_ceiling=ceiling,
+            ),
+        )
+        frac, _, _ = scanned_fraction_of(tree, bids, records, work, cuts)
+        out["bottom_up"] = dict(
+            tree=tree, bids=bids, scanned=frac,
+            build_s=time.perf_counter() - t0,
+        )
+    if "greedy" in which:
+        t0 = time.perf_counter()
+        tree = greedy.build_greedy(
+            records, work, cuts, greedy.GreedyConfig(min_block=min_block)
+        )
+        frozen = tree.freeze()
+        bids = frozen.route(records)
+        frozen.tighten(records, bids)
+        frac, _, _ = scanned_fraction_of(frozen, bids, records, work, cuts)
+        out["greedy"] = dict(
+            tree=frozen, bids=bids, scanned=frac,
+            build_s=time.perf_counter() - t0,
+        )
+    if "woodblock" in which:
+        t0 = time.perf_counter()
+        cfg = WoodblockConfig(
+            min_block_sample=min_block, n_iters=rl_iters,
+            episodes_per_iter=4, seed=seed,
+        )
+        res = build_woodblock(records, work, cuts, cfg)
+        frozen = res.best_tree.freeze()
+        bids = frozen.route(records)
+        frozen.tighten(records, bids)
+        frac, _, _ = scanned_fraction_of(frozen, bids, records, work, cuts)
+        out["woodblock"] = dict(
+            tree=frozen, bids=bids, scanned=frac,
+            build_s=time.perf_counter() - t0, curve=res.curve,
+        )
+    return out
+
+
+def write_result(name: str, payload: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=_default))
+    print(f"[{name}] wrote {path}")
+
+
+def _default(o):
+    import dataclasses
+
+    if dataclasses.is_dataclass(o):
+        return dataclasses.asdict(o)
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))

@@ -1,0 +1,105 @@
+"""Paper Figs. 5/7: physical execution — queries run against the block
+store under each layout.  The container has no Spark/DBMS fleet, so the
+physical metric is (blocks read, bytes read, vectorized-scan wall time)
+per query; per-template means mirror Fig. 5, per-query speedup CDF mirrors
+Fig. 7c.  The *no route* ablation (Sec 7.5) executes without the explicit
+BID list by intersecting min-max descriptions for every block's metadata.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.data.blocks import BlockStore
+from benchmarks import common
+
+
+def run(scale: float = 0.5, rl_iters: int = 12, seed: int = 0) -> dict:
+    out = {}
+    for name in ("tpch", "errorlog_int"):
+        schema, records, work, labels, cuts, min_block = (
+            common.load_workload(name, scale, seed)
+        )
+        layouts = common.build_layouts(
+            name, schema, records, work, cuts, min_block,
+            which=("baseline", "bottom_up", "woodblock"),
+            rl_iters=rl_iters, seed=seed,
+        )
+        per_layout = {}
+        for lname, lay in layouts.items():
+            with tempfile.TemporaryDirectory() as td:
+                store = _store_from_layout(td, lay, records)
+                t0 = time.perf_counter()
+                blocks, bytes_, wall = [], [], []
+                for q in work.queries:
+                    r = store.scan_query(q)
+                    blocks.append(r.blocks_read)
+                    bytes_.append(r.bytes_read)
+                    wall.append(r.wall_s)
+                per_layout[lname] = {
+                    "total_wall_s": round(time.perf_counter() - t0, 2),
+                    "mean_blocks_read": float(np.mean(blocks)),
+                    "total_bytes_read": int(np.sum(bytes_)),
+                    "per_query_wall_ms": [round(1e3 * w, 3) for w in wall],
+                    "per_template": _by_template(labels, wall),
+                }
+        base = np.asarray(per_layout["bottom_up"]["per_query_wall_ms"])
+        ours = np.asarray(per_layout["woodblock"]["per_query_wall_ms"])
+        speedups = base / np.maximum(ours, 1e-6)
+        per_layout["speedup_vs_bottom_up"] = {
+            "workload_x": float(
+                per_layout["bottom_up"]["total_wall_s"]
+                / max(per_layout["woodblock"]["total_wall_s"], 1e-9)
+            ),
+            "bytes_x": float(
+                per_layout["bottom_up"]["total_bytes_read"]
+                / max(per_layout["woodblock"]["total_bytes_read"], 1)
+            ),
+            "p50_query_x": float(np.percentile(speedups, 50)),
+            "p90_query_x": float(np.percentile(speedups, 90)),
+        }
+        out[name] = per_layout
+        s = per_layout["speedup_vs_bottom_up"]
+        print(
+            f"[fig5] {name}: qd-tree vs bottom-up — wall {s['workload_x']:.1f}×, "
+            f"bytes {s['bytes_x']:.1f}×, p50 query {s['p50_query_x']:.1f}×"
+        )
+    common.write_result("fig5_runtime", out)
+    return out
+
+
+def _store_from_layout(td, lay, records):
+    """Persist an already-built layout (tree may be a baseline flat tree
+    whose BIDs came from the partitioner, not routing)."""
+    import json as _json
+    import pathlib
+
+    root = pathlib.Path(td)
+    tree, bids = lay["tree"], lay["bids"]
+    sizes = np.bincount(bids, minlength=tree.n_leaves)
+    order = np.argsort(bids, kind="stable")
+    srt = records[order]
+    bounds = np.concatenate([[0], np.cumsum(sizes)])
+    for b in range(tree.n_leaves):
+        np.savez(root / f"block_{b:06d}.npz", rows=srt[bounds[b]:bounds[b+1]])
+    tree.save(str(root / "qdtree.npz"))
+    row_bytes = records.shape[1] * records.dtype.itemsize
+    (root / "manifest.json").write_text(_json.dumps({
+        "n_blocks": int(tree.n_leaves), "sizes": sizes.tolist(),
+        "row_bytes": row_bytes, "n_rows": int(records.shape[0]),
+    }))
+    return BlockStore(root=root, tree=tree, sizes=sizes, row_bytes=row_bytes)
+
+
+def _by_template(labels, wall):
+    agg = {}
+    for lab, w in zip(labels, wall):
+        agg.setdefault(lab, []).append(1e3 * w)
+    return {k: round(float(np.mean(v)), 3) for k, v in agg.items()}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Paper Fig. 6: (a) record-routing throughput; (b) query-routing latency.
+
+Throughput is measured for all three routing backends — numpy oracle,
+jitted jnp, and the Pallas kernel pair (interpret mode on CPU; the same
+kernels compile for TPU).  Query routing reports the per-query latency
+distribution of the BID-list computation (Sec 3.3).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import query as qry, routing
+from benchmarks import common
+
+
+def run(scale: float = 0.5, seed: int = 0) -> dict:
+    from repro.core import greedy
+
+    schema, records, work, labels, cuts, min_block = common.load_workload(
+        "tpch", scale, seed
+    )
+    tree = greedy.build_greedy(
+        records, work, cuts, greedy.GreedyConfig(min_block=min_block)
+    )
+    frozen = tree.freeze()
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+
+    batch = records[: min(32_768, records.shape[0])]
+    thr = {}
+    for backend in ("numpy", "jax", "pallas"):
+        routing.route(frozen, batch[:256], backend=backend)  # warmup/jit
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            out = routing.route(frozen, batch, backend=backend)
+        dt = (time.perf_counter() - t0) / reps
+        thr[backend] = {
+            "records_per_s": float(batch.shape[0] / dt),
+            "batch": int(batch.shape[0]),
+        }
+        print(
+            f"[fig6] route[{backend}]: "
+            f"{thr[backend]['records_per_s']:,.0f} rec/s"
+        )
+
+    lat = []
+    for q in work.queries:
+        t0 = time.perf_counter()
+        qry.route_query(frozen, q)
+        lat.append(1e3 * (time.perf_counter() - t0))
+    lat = np.asarray(lat)
+    qlat = {
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p90_ms": float(np.percentile(lat, 90)),
+        "max_ms": float(lat.max()),
+        "n_queries": int(lat.size),
+        "n_blocks": int(frozen.n_leaves),
+    }
+    print(
+        f"[fig6] query routing: p50={qlat['p50_ms']:.2f}ms "
+        f"max={qlat['max_ms']:.2f}ms over {qlat['n_blocks']} blocks "
+        f"(paper: <16ms max)"
+    )
+    out = {"routing_throughput": thr, "query_latency": qlat}
+    common.write_result("fig6_routing", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

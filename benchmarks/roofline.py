@@ -1,0 +1,134 @@
+"""§Roofline: derive the three roofline terms per (arch × shape) from the
+dry-run artifacts (results/dryrun/*.json) and emit the table.
+
+Terms (seconds per step, single-pod 256-chip mesh; cost_analysis numbers
+are PER-DEVICE for the partitioned module, so chips cancel):
+
+  compute    = HLO_FLOPs/device    / 197 TFLOP/s   (bf16 peak, v5e)
+  memory     = HLO_bytes/device    / 819 GB/s      (HBM bandwidth)
+  collective = coll_bytes/device   / 50 GB/s       (ICI per link)
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (serving);
+useful-fraction = MODEL_FLOPS/device ÷ HLO_FLOPs/device exposes remat/
+dispatch overhead.  roofline_fraction = model-flops-time ÷ dominant term —
+the score this report optimizes (§Perf).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+OUT = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def tokens_for(rec) -> tuple[float, float]:
+    """(tokens per step, flops multiplier per active param per token)."""
+    shape = rec["shape"]
+    from repro.configs import SHAPES
+
+    s = SHAPES[shape]
+    if s.kind == "train":
+        return s.global_batch * s.seq_len, 1.0  # model_flops already 6N
+    if s.kind == "prefill":
+        return s.global_batch * s.seq_len, 2.0 / 6.0
+    return s.global_batch * 1.0, 2.0 / 6.0  # decode: one token per seq
+
+
+def analyse(rec) -> dict | None:
+    ct = rec.get("cost_terms")
+    if not ct:
+        return None
+    chips = rec["chips"]
+    flops_dev = ct["total_flops"]
+    bytes_dev = ct["total_bytes"]
+    coll_dev = ct["total_collective_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    toks, mult = tokens_for(rec)
+    model_flops_global = rec["model_flops"] * mult * toks
+    model_flops_dev = model_flops_global / chips
+    useful = model_flops_dev / max(flops_dev, 1.0)
+    # the per-step floor: every model byte read once (params/opt/caches =
+    # the step's per-device argument bytes) OR the model math at peak —
+    # whichever binds.  roofline_fraction = floor time / dominant term.
+    floor_bytes_dev = rec["memory"]["argument_size_in_bytes"]
+    t_ideal = max(model_flops_dev / PEAK_FLOPS, floor_bytes_dev / HBM_BW)
+    frac = t_ideal / max(terms[dominant], 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "step": rec["step"],
+        "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "dominant": dominant,
+        "model_flops_global": model_flops_global,
+        "useful_flops_ratio": useful,
+        "ideal_s": t_ideal,
+        "roofline_fraction": frac,
+        "hbm_per_device_gb": (
+            rec["memory"]["argument_size_in_bytes"]
+            + rec["memory"]["temp_size_in_bytes"]
+        ) / 1e9,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+ADVICE = {
+    "collective": "reshard to cut resharding collectives (less TP for "
+    "small d_model, SP only where activations dominate, overlap via LHS)",
+    "memory": "raise arithmetic intensity: larger attention blocks, fused "
+    "remat policy, wider microbatches",
+    "compute": "near compute-bound: shave remat recompute / dispatch "
+    "overhead to close the useful-FLOPs gap",
+}
+
+
+def run(write: bool = True) -> dict:
+    rows = []
+    for p in sorted(DRYRUN.glob("*__singlepod.json")):
+        rec = json.loads(p.read_text())
+        a = analyse(rec)
+        if a:
+            a["advice"] = ADVICE[a["dominant"]]
+            rows.append(a)
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    md = [
+        "| arch | shape | step | compute s | memory s | collective s | "
+        "dominant | useful | roofline frac | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['hbm_per_device_gb']:.1f} |"
+        )
+    table = "\n".join(md)
+    if write:
+        OUT.mkdir(exist_ok=True)
+        (OUT / "roofline.md").write_text(table + "\n")
+        (OUT / "roofline.json").write_text(
+            json.dumps(rows, indent=1)
+        )
+        print(f"[roofline] {len(rows)} cells → results/roofline.md")
+    for r in rows[:8]:
+        print(
+            f"[roofline] worst: {r['arch']}×{r['shape']} "
+            f"frac={r['roofline_fraction']:.3f} dom={r['dominant']}"
+        )
+    return {"rows": rows, "markdown": table}
+
+
+if __name__ == "__main__":
+    run()

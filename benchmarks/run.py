@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--full] [--skip roofline,...]``."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="10× rows (closer to paper scale; much slower)")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated benchmark names to skip")
+    args = ap.parse_args()
+    scale = 10.0 if args.full else 1.0
+    skip = set(filter(None, args.skip.split(",")))
+
+    from benchmarks import (
+        fig3_micro,
+        fig5_runtime,
+        fig6_routing,
+        fig8_learning,
+        roofline,
+        table2_skipping,
+    )
+
+    suite = [
+        ("table2", lambda: table2_skipping.run(scale=scale)),
+        ("fig3", lambda: fig3_micro.run(scale=scale)),
+        ("fig5", lambda: fig5_runtime.run(scale=0.5 * scale)),
+        ("fig6", lambda: fig6_routing.run(scale=0.5 * scale)),
+        ("fig8", lambda: fig8_learning.run(scale=0.5 * scale)),
+        ("roofline", roofline.run),
+    ]
+    t_all = time.perf_counter()
+    for name, fn in suite:
+        if name in skip:
+            print(f"== {name}: skipped ==")
+            continue
+        t0 = time.perf_counter()
+        print(f"== {name} ==", flush=True)
+        fn()
+        print(f"== {name} done in {time.perf_counter()-t0:.1f}s ==")
+    print(f"benchmark suite finished in {time.perf_counter()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Fault tolerance demo: crash mid-training, resume from checkpoint —
+including onto a different mesh (elastic resharding) — and show block-level
+work stealing when a data worker fails.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import subprocess
+import sys
+import tempfile
+
+from repro.data.pipeline import ElasticBlockScheduler
+
+
+def crash_and_resume():
+    with tempfile.TemporaryDirectory() as ckpt:
+        base = [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "qwen1.5-32b", "--steps", "16", "--batch", "4",
+            "--seq", "64", "--ckpt-dir", ckpt, "--ckpt-every", "5",
+            "--rows", "20000",
+        ]
+        print("== run 1: injected failure at step 12 ==")
+        r = subprocess.run(
+            base + ["--fail-at", "12"], capture_output=True, text=True,
+            env=_env(),
+        )
+        assert "injected failure" in (r.stdout + r.stderr), r.stderr[-2000:]
+        print("crashed as expected; resuming…")
+        print("== run 2: resume to completion ==")
+        r = subprocess.run(base, capture_output=True, text=True, env=_env())
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "resumed from step 10" in r.stdout, r.stdout[-2000:]
+        print([l for l in r.stdout.splitlines() if "resumed" in l or
+               "done" in l])
+
+
+def _env():
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return env
+
+
+def work_stealing():
+    print("== block-level work stealing ==")
+    sched = ElasticBlockScheduler(list(range(12)), seed=0)
+    w0 = [sched.next_block(0) for _ in range(5)]
+    w1 = [sched.next_block(1) for _ in range(3)]
+    print(f"worker0 holds {w0}, worker1 holds {w1}")
+    lost = sched.fail(0)
+    print(f"worker0 failed; re-queued blocks {lost} (metadata-only handoff "
+          "— completeness means peers know block contents without reads)")
+    stolen = [sched.next_block(1) for _ in range(len(lost))]
+    assert sorted(stolen) == sorted(lost)
+    print(f"worker1 stole {stolen}")
+
+
+if __name__ == "__main__":
+    crash_and_resume()
+    work_stealing()
+    print("elastic_restart OK")

@@ -1,0 +1,34 @@
+"""Batched serving demo: prefill a prompt batch, decode with KV/SSM caches.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
+  PYTHONPATH=src python examples/serve_lm.py --arch jamba-1.5-large-398b
+
+Exercises the same serve_step the decode_32k / long_500k dry-run cells
+lower, on reduced configs — including the hybrid (attention + SSD-state)
+cache path.
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-780m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    gen = serve.main([
+        "--arch", args.arch,
+        "--batch", str(args.batch),
+        "--prompt-len", "32",
+        "--gen", str(args.gen),
+        "--max-seq", "128",
+    ])
+    assert gen.shape == (args.batch, args.gen)
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Baseline layouts the paper compares against (Sec 7.3)."""
+
+from repro.baselines.partitioners import random_layout, range_layout  # noqa: F401
+from repro.baselines.bottom_up import (  # noqa: F401
+    BottomUpConfig,
+    build_bottom_up,
+)

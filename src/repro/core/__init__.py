@@ -1,0 +1,46 @@
+"""The paper's primary contribution: qd-tree learned data layouts.
+
+Public surface:
+  predicates — Schema / CutTable / predicate evaluation
+  qdtree     — Node/QdTree (construction) + FrozenQdTree (serving)
+  query      — Query/Workload, tensorization, block intersection
+  rewards    — C(P) skip metrics, per-node RL rewards
+  greedy     — paper Algorithm 1
+  routing    — batched record→BID routing backends
+  woodblock  — deep-RL construction agent (paper Sec 5)
+  overlap    — data-overlap extension (paper Sec 6.2)
+  replication— two-tree replication (paper Sec 6.3)
+"""
+
+from repro.core.predicates import (  # noqa: F401
+    AdvPredicate,
+    Column,
+    CutTable,
+    CutTableBuilder,
+    Schema,
+    eval_cuts,
+)
+from repro.core.qdtree import (  # noqa: F401
+    FrozenQdTree,
+    Node,
+    NodeDesc,
+    QdTree,
+    child_descs,
+    root_desc,
+    singleton_tree,
+)
+from repro.core.query import (  # noqa: F401
+    AdvAtom,
+    InAtom,
+    Query,
+    RangeAtom,
+    Workload,
+    route_query,
+)
+from repro.core.rewards import (  # noqa: F401
+    SkipStats,
+    evaluate_layout,
+    selectivity_lower_bound,
+)
+from repro.core.greedy import GreedyConfig, build_greedy  # noqa: F401
+from repro.core.routing import route  # noqa: F401

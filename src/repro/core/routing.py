@@ -1,0 +1,138 @@
+"""Batched data routing through a frozen qd-tree (paper Sec 3.1).
+
+Three interchangeable backends, all bit-identical:
+
+* ``FrozenQdTree.route``      — numpy oracle (core/qdtree.py)
+* ``route_jax``               — jitted jnp level-synchronous descent (here)
+* ``kernels.ops.route_records`` — Pallas TPU kernel (one-hot matmul descent)
+
+The jnp/Pallas paths take the tree as a pytree of arrays so the same
+compiled function serves any tree of equal static shape (n_nodes is padded
+to a bucket size to maximize jit cache hits during online ingestion).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predicates as preds
+from repro.core.qdtree import FrozenQdTree
+
+
+def tree_arrays(tree: FrozenQdTree, pad_nodes: int | None = None) -> dict:
+    """Pack the frozen tree into jnp-friendly arrays (optionally padded)."""
+    n = tree.n_nodes
+    pad = pad_nodes or n
+    if pad < n:
+        raise ValueError("pad_nodes < n_nodes")
+
+    def _pad(x, fill):
+        out = np.full((pad,) + x.shape[1:], fill, x.dtype)
+        out[:n] = x
+        return out
+
+    return {
+        "cut_id": jnp.asarray(_pad(tree.cut_id, -1)),
+        "left": jnp.asarray(_pad(tree.left, 0)),
+        "right": jnp.asarray(_pad(tree.right, 0)),
+        "leaf_bid": jnp.asarray(_pad(tree.leaf_bid, -1)),
+        "depth": tree.depth,
+    }
+
+
+def cut_arrays(cuts: preds.CutTable) -> dict:
+    """Pack the cut table for jnp evaluation."""
+    adv = np.array(
+        [(a.col_a, a.op, a.col_b) for a in cuts.adv], np.int32
+    ).reshape(-1, 3)
+    return {
+        "kind": jnp.asarray(cuts.kind),
+        "dim": jnp.asarray(np.maximum(cuts.dim, 0)),
+        "cutpoint": jnp.asarray(cuts.cutpoint),
+        "in_mask": jnp.asarray(cuts.in_mask),
+        "adv_id": jnp.asarray(np.maximum(cuts.adv_id, 0)),
+        "adv": jnp.asarray(adv),
+        "cat_offset": jnp.asarray(np.maximum(cuts.schema.cat_offsets, 0)),
+    }
+
+
+def eval_cuts_jax(records: jnp.ndarray, ca: dict) -> jnp.ndarray:
+    """(m, n_cuts) bool predicate matrix — jnp mirror of preds.eval_cuts."""
+    vals = records[:, ca["dim"]]  # (m, n_cuts) gathered column values
+    rng = vals < ca["cutpoint"][None, :]
+    # IN: bit lookup at (cut, value + dim offset)
+    bitpos = vals + ca["cat_offset"][ca["dim"]][None, :]
+    bitpos = jnp.clip(bitpos, 0, ca["in_mask"].shape[1] - 1)
+    inm = _in_lookup(ca["in_mask"], bitpos)
+    # advanced predicates
+    if ca["adv"].shape[0] > 0:
+        va = records[:, ca["adv"][:, 0]]
+        vb = records[:, ca["adv"][:, 2]]
+        op = ca["adv"][:, 1][None, :]
+        advt = jnp.select(
+            [op == 0, op == 1, op == 2, op == 3, op == 4, op == 5],
+            [va < vb, va <= vb, va > vb, va >= vb, va == vb, va != vb],
+        )
+        advm = advt[:, ca["adv_id"]]
+    else:
+        advm = jnp.zeros_like(rng)
+    k = ca["kind"][None, :]
+    return jnp.where(
+        k == preds.KIND_RANGE, rng, jnp.where(k == preds.KIND_IN, inm, advm)
+    )
+
+
+def _in_lookup(in_mask: jnp.ndarray, bitpos: jnp.ndarray) -> jnp.ndarray:
+    """in_mask[c, bitpos[m, c]] without materializing (m, n_cuts, bits)."""
+    # vmap over the cut axis: each cut has its own mask row + position column.
+    def per_cut(mask_row, pos_col):
+        return mask_row[pos_col]
+
+    return jax.vmap(per_cut, in_axes=(0, 1), out_axes=1)(in_mask, bitpos)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _route_jit(
+    records: jnp.ndarray, ta: dict, ca: dict, depth: int
+) -> jnp.ndarray:
+    M = eval_cuts_jax(records, ca)
+    m = records.shape[0]
+    node = jnp.zeros(m, jnp.int32)
+
+    def body(_, node):
+        cid = ta["cut_id"][node]
+        pred = jnp.take_along_axis(
+            M, jnp.clip(cid, 0)[:, None].astype(jnp.int32), axis=1
+        )[:, 0]
+        nxt = jnp.where(pred, ta["left"][node], ta["right"][node])
+        return jnp.where(cid >= 0, nxt, node)
+
+    node = jax.lax.fori_loop(0, depth, body, node)
+    return ta["leaf_bid"][node]
+
+
+def route_jax(tree: FrozenQdTree, records: np.ndarray) -> np.ndarray:
+    """Route a record batch on the jnp backend; returns (m,) int32 BIDs."""
+    ta = tree_arrays(tree)
+    depth = ta.pop("depth")
+    ca = cut_arrays(tree.cuts)
+    out = _route_jit(jnp.asarray(records), ta, ca, depth)
+    return np.asarray(out)
+
+
+def route(
+    tree: FrozenQdTree, records: np.ndarray, backend: str = "jax"
+) -> np.ndarray:
+    if backend == "numpy":
+        return tree.route(records)
+    if backend == "jax":
+        return route_jax(tree, records)
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        return ops.route_records(tree, records)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,10 @@
+"""WOODBLOCK: deep-RL qd-tree construction (paper Sec 5)."""
+
+from repro.core.woodblock.agent import (  # noqa: F401
+    Woodblock,
+    WoodblockConfig,
+    WoodblockResult,
+    build_woodblock,
+)
+from repro.core.woodblock.env import TreeEnv  # noqa: F401
+from repro.core.woodblock.ppo import PPOConfig  # noqa: F401

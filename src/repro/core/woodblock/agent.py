@@ -1,0 +1,174 @@
+"""WOODBLOCK: the deep-RL qd-tree construction agent (paper Sec 5.2).
+
+Training loop: repeatedly construct trees (episodes), score them with the
+workload-skipping reward, and refine the policy with PPO.  The best tree
+found is deployed (paper: "After attempting a fixed number of trees or if a
+timeout is reached, the best tree found is deployed").  A learning curve of
+(wall-clock, best/current scan fraction) is recorded to reproduce Fig 8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predicates as preds
+from repro.core import query as qry
+from repro.core.qdtree import QdTree
+from repro.core.woodblock import networks, ppo
+from repro.core.woodblock.env import TreeEnv
+
+
+@dataclasses.dataclass
+class WoodblockConfig:
+    min_block_sample: int  # s·b — min sample records per block (Sec 5.2.1)
+    n_iters: int = 40
+    episodes_per_iter: int = 4
+    time_budget_s: float | None = None
+    seed: int = 0
+    max_leaves: int | None = None
+    allow_small_child: bool = False  # overlap extension (Sec 6.2)
+    ppo: ppo.PPOConfig = dataclasses.field(default_factory=ppo.PPOConfig)
+
+
+@dataclasses.dataclass
+class CurvePoint:
+    wall_s: float
+    episode: int
+    current_scanned: float
+    best_scanned: float
+
+
+@dataclasses.dataclass
+class WoodblockResult:
+    best_tree: QdTree
+    best_scanned: float
+    curve: list[CurvePoint]
+    n_episodes: int
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+class Woodblock:
+    def __init__(
+        self,
+        sample: np.ndarray,
+        workload: qry.Workload,
+        cuts: preds.CutTable,
+        cfg: WoodblockConfig,
+        reward_override=None,
+    ):
+        self.env = TreeEnv(
+            sample,
+            workload,
+            cuts,
+            cfg.min_block_sample,
+            allow_small_child=cfg.allow_small_child,
+            max_leaves=cfg.max_leaves,
+        )
+        if reward_override is not None:
+            # two-tree replication (Sec 6.3) plugs in a modified reward
+            self.env_reward_override = reward_override
+        else:
+            self.env_reward_override = None
+        self.cfg = cfg
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self.key, sub = jax.random.split(self.key)
+        self.params = networks.init_params(
+            sub, self.env.feature_dim, self.env.n_actions
+        )
+        self.opt_state = ppo.adam_init(self.params)
+        self.rng = np.random.default_rng(cfg.seed)
+
+    # -- batched, bucket-padded policy for the env ---------------------------
+    def _policy_fn(self, states: np.ndarray, legals: np.ndarray):
+        n = states.shape[0]
+        cap = _bucket(n)
+        s = np.zeros((cap, states.shape[1]), np.float32)
+        l = np.zeros((cap, legals.shape[1]), bool)
+        s[:n] = states
+        l[:n] = legals
+        l[n:, 0] = True
+        self.key, sub = jax.random.split(self.key)
+        a, lp, v = ppo.policy_step(
+            self.params, jnp.asarray(s), jnp.asarray(l), sub
+        )
+        return np.asarray(a)[:n], np.asarray(lp)[:n], np.asarray(v)[:n]
+
+    # -- main loop -----------------------------------------------------------
+    def train(self, verbose: bool = False) -> WoodblockResult:
+        cfg = self.cfg
+        best_tree, best_scanned = None, float("inf")
+        curve: list[CurvePoint] = []
+        t0 = time.perf_counter()
+        episode = 0
+        for it in range(cfg.n_iters):
+            transitions = []
+            for _ in range(cfg.episodes_per_iter):
+                result = self.env.run_episode(self._policy_fn, self.rng)
+                if self.env_reward_override is not None:
+                    self.env_reward_override(result)
+                episode += 1
+                transitions.extend(result.transitions)
+                if result.scanned_fraction < best_scanned:
+                    best_scanned = result.scanned_fraction
+                    best_tree = result.tree
+                curve.append(
+                    CurvePoint(
+                        wall_s=time.perf_counter() - t0,
+                        episode=episode,
+                        current_scanned=result.scanned_fraction,
+                        best_scanned=best_scanned,
+                    )
+                )
+            if not transitions:
+                break
+            batch = ppo.make_batch(
+                transitions,
+                cap=_bucket(len(transitions)),
+                n_actions=self.env.n_actions,
+                feat_dim=self.env.feature_dim,
+            )
+            for _ in range(cfg.ppo.epochs):
+                self.params, self.opt_state, aux = ppo.ppo_update(
+                    self.params, self.opt_state, batch, cfg.ppo
+                )
+            if verbose:
+                print(
+                    f"iter {it}: episodes={episode} "
+                    f"best={best_scanned:.4f} "
+                    f"cur={result.scanned_fraction:.4f} "
+                    f"pi_loss={float(aux['policy_loss']):.4f} "
+                    f"v_loss={float(aux['value_loss']):.4f}"
+                )
+            if (
+                cfg.time_budget_s is not None
+                and time.perf_counter() - t0 > cfg.time_budget_s
+            ):
+                break
+        assert best_tree is not None, "no legal cuts at the root"
+        return WoodblockResult(
+            best_tree=best_tree,
+            best_scanned=best_scanned,
+            curve=curve,
+            n_episodes=episode,
+        )
+
+
+def build_woodblock(
+    sample: np.ndarray,
+    workload: qry.Workload,
+    cuts: preds.CutTable,
+    cfg: WoodblockConfig,
+    verbose: bool = False,
+) -> WoodblockResult:
+    return Woodblock(sample, workload, cuts, cfg).train(verbose=verbose)

@@ -1,0 +1,47 @@
+"""Policy/value networks for WOODBLOCK (paper Sec 5.2.3).
+
+Shared trunk: two fully-connected layers of 512 units with ReLU.  Heads:
+|A|-dim linear policy projection + scalar value projection.  Pure JAX —
+no flax/optax in this environment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = 512
+
+
+def init_params(key: jax.Array, in_dim: int, n_actions: int, hidden: int = HIDDEN):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def dense(k, fan_in, fan_out):
+        scale = jnp.sqrt(2.0 / fan_in)
+        return {
+            "w": jax.random.normal(k, (fan_in, fan_out), jnp.float32) * scale,
+            "b": jnp.zeros((fan_out,), jnp.float32),
+        }
+
+    return {
+        "fc1": dense(k1, in_dim, hidden),
+        "fc2": dense(k2, hidden, hidden),
+        "policy": dense(k3, hidden, n_actions),
+        "value": dense(k4, hidden, 1),
+    }
+
+
+def forward(params, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, in_dim) → (logits (B, A), value (B,))."""
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    logits = h @ params["policy"]["w"] + params["policy"]["b"]
+    value = (h @ params["value"]["w"] + params["value"]["b"])[:, 0]
+    return logits, value
+
+
+def masked_log_softmax(logits: jnp.ndarray, legal: jnp.ndarray) -> jnp.ndarray:
+    """Log-probabilities with illegal actions forced to ~-inf."""
+    neg = jnp.finfo(logits.dtype).min / 2
+    masked = jnp.where(legal, logits, neg)
+    return jax.nn.log_softmax(masked, axis=-1)

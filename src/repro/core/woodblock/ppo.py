@@ -1,0 +1,155 @@
+"""Proximal Policy Optimization in pure JAX (paper Sec 5.2: PPO is the
+black-box update rule).
+
+The tree-structured MDP treats each node as an independent state whose
+normalized reward *is* its return (no discounting across the tree — Sec
+5.2.4), so advantages are simply ``R - V(s)``.  Buffers are padded to a
+static capacity so one jitted update function serves every iteration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.woodblock import networks
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 3e-4
+    clip_eps: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    epochs: int = 4
+    buffer_cap: int = 2048
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    max_grad_norm: float = 0.5
+
+
+# -- minimal Adam (optax is unavailable offline) ----------------------------
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, cfg: PPOConfig):
+    t = state["t"] + 1
+    m = jax.tree.map(
+        lambda m, g: cfg.adam_b1 * m + (1 - cfg.adam_b1) * g, state["m"], grads
+    )
+    v = jax.tree.map(
+        lambda v, g: cfg.adam_b2 * v + (1 - cfg.adam_b2) * g * g,
+        state["v"],
+        grads,
+    )
+    mh = jax.tree.map(lambda m: m / (1 - cfg.adam_b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - cfg.adam_b2 ** t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - cfg.lr * mh / (jnp.sqrt(vh) + cfg.adam_eps),
+        params,
+        mh,
+        vh,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(x * x) for x in jax.tree.leaves(tree))
+    )
+
+
+def ppo_loss(params, batch, cfg: PPOConfig):
+    logits, values = networks.forward(params, batch["states"])
+    logp_all = networks.masked_log_softmax(logits, batch["legal"])
+    logp = jnp.take_along_axis(
+        logp_all, batch["actions"][:, None], axis=1
+    )[:, 0]
+    ratio = jnp.exp(logp - batch["old_logp"])
+    adv = batch["advantages"]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+    w = batch["weight"]  # 0 on padding rows
+    denom = jnp.maximum(w.sum(), 1.0)
+    policy_loss = -(jnp.minimum(unclipped, clipped) * w).sum() / denom
+    value_loss = (((values - batch["returns"]) ** 2) * w).sum() / denom
+    probs = jnp.exp(logp_all)
+    entropy = -(
+        (probs * jnp.where(batch["legal"], logp_all, 0.0)).sum(axis=1) * w
+    ).sum() / denom
+    total = (
+        policy_loss
+        + cfg.value_coef * value_loss
+        - cfg.entropy_coef * entropy
+    )
+    return total, {
+        "policy_loss": policy_loss,
+        "value_loss": value_loss,
+        "entropy": entropy,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ppo_update(params, opt_state, batch, cfg: PPOConfig):
+    (_, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        params, batch, cfg
+    )
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.max_grad_norm / (gnorm + 1e-8))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    params, opt_state = adam_update(params, grads, opt_state, cfg)
+    aux["grad_norm"] = gnorm
+    return params, opt_state, aux
+
+
+@functools.partial(jax.jit, static_argnames=())
+def policy_step(params, states, legal, key):
+    """Sample actions for a batch of states (used inside episodes)."""
+    logits, values = networks.forward(params, states)
+    logp_all = networks.masked_log_softmax(logits, legal)
+    actions = jax.random.categorical(key, logp_all, axis=-1)
+    logp = jnp.take_along_axis(logp_all, actions[:, None], axis=1)[:, 0]
+    return actions, logp, values
+
+
+def make_batch(transitions, cap: int, n_actions: int, feat_dim: int):
+    """Pad a transition list into a static-shape PPO batch."""
+    n = min(len(transitions), cap)
+    states = np.zeros((cap, feat_dim), np.float32)
+    legal = np.zeros((cap, n_actions), bool)
+    actions = np.zeros((cap,), np.int32)
+    old_logp = np.zeros((cap,), np.float32)
+    returns = np.zeros((cap,), np.float32)
+    values = np.zeros((cap,), np.float32)
+    weight = np.zeros((cap,), np.float32)
+    for i, t in enumerate(transitions[:cap]):
+        states[i] = t.state
+        legal[i] = t.legal
+        actions[i] = t.action
+        old_logp[i] = t.logp
+        returns[i] = t.reward
+        values[i] = t.value
+        weight[i] = 1.0
+    adv = returns - values
+    # normalize advantages over valid rows
+    if n > 1:
+        mu = adv[:n].mean()
+        sd = adv[:n].std() + 1e-8
+        adv = np.where(weight > 0, (adv - mu) / sd, 0.0)
+    legal[weight == 0, 0] = True  # keep padded rows' softmax well-defined
+    return {
+        "states": jnp.asarray(states),
+        "legal": jnp.asarray(legal),
+        "actions": jnp.asarray(actions),
+        "old_logp": jnp.asarray(old_logp),
+        "returns": jnp.asarray(returns),
+        "advantages": jnp.asarray(adv),
+        "weight": jnp.asarray(weight),
+    }

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel for query↔block intersection + fused skip counting.
+
+Computes, for a tile of block descriptions × a tile of workload conjuncts
+(paper Sec 3.3):
+
+    hits[l, c]  = 1  iff block l may contain records matching conjunct c
+    scanned[c] += Σ_l |block l| · hits[l, c]      (fused Eq.-1 reduction)
+
+Numeric box overlap is a static loop of broadcast compares (VPU); the
+categorical any-shared-value test per dim is a mask matmul over that dim's
+bit segment (MXU); advanced-cut polarity checks are a small static loop.
+
+Grid = (n_conj_tiles, n_leaf_tiles) with the *leaf* axis innermost so the
+``scanned`` accumulator block (0, c) is revisited in consecutive grid steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _intersect_kernel(
+    leaf_lo_ref,  # (TL, D) f32
+    leaf_hi_ref,  # (TL, D) f32
+    leaf_cat_ref,  # (TL, B) f32
+    leaf_advt_ref,  # (TL, A) f32 — may contain satisfying records
+    leaf_advf_ref,  # (TL, A) f32 — may contain violating records
+    leaf_size_ref,  # (TL, 1) f32
+    q_lo_ref,  # (TC, D) f32
+    q_hi_ref,  # (TC, D) f32
+    q_cat_ref,  # (TC, B) f32
+    q_reqt_ref,  # (TC, A) f32 — conjunct requires pred true
+    q_reqf_ref,  # (TC, A) f32 — conjunct requires pred false
+    hits_ref,  # out (TL, TC) f32
+    scanned_ref,  # out (1, TC) f32, accumulated over leaf tiles
+    *,
+    numeric_dims: tuple[int, ...],
+    cat_segments: tuple[tuple[int, int], ...],
+    n_adv: int,
+):
+    i_leaf = pl.program_id(1)
+
+    @pl.when(i_leaf == 0)
+    def _init():
+        scanned_ref[...] = jnp.zeros_like(scanned_ref)
+
+    tl = leaf_lo_ref.shape[0]
+    tc = q_lo_ref.shape[0]
+    ok = jnp.ones((tl, tc), jnp.float32)
+
+    # numeric box overlap: max(lo) < min(hi), per dim (static unroll)
+    for d in numeric_dims:
+        lo = jnp.maximum(leaf_lo_ref[:, d][:, None], q_lo_ref[:, d][None, :])
+        hi = jnp.minimum(leaf_hi_ref[:, d][:, None], q_hi_ref[:, d][None, :])
+        ok = ok * (lo < hi).astype(jnp.float32)
+
+    # categorical: each dim must share ≥1 allowed value (mask matmul per dim)
+    for (s, e) in cat_segments:
+        shared = jnp.dot(
+            leaf_cat_ref[:, s:e],
+            q_cat_ref[:, s:e].T,
+            preferred_element_type=jnp.float32,
+        )
+        ok = ok * (shared > 0.5).astype(jnp.float32)
+
+    # advanced-cut polarity compatibility
+    for a in range(n_adv):
+        may_t = leaf_advt_ref[:, a][:, None]
+        may_f = leaf_advf_ref[:, a][:, None]
+        req_t = q_reqt_ref[:, a][None, :]
+        req_f = q_reqf_ref[:, a][None, :]
+        ok = ok * (1.0 - req_t * (1.0 - may_t))
+        ok = ok * (1.0 - req_f * (1.0 - may_f))
+
+    hits_ref[...] = ok
+    scanned_ref[...] += jnp.dot(
+        leaf_size_ref[...].T, ok, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tile_l", "tile_c", "numeric_dims", "cat_segments", "n_adv",
+        "interpret",
+    ),
+)
+def query_intersect_pallas(
+    leaf_lo, leaf_hi, leaf_cat, leaf_advt, leaf_advf, leaf_size,
+    q_lo, q_hi, q_cat, q_reqt, q_reqf,
+    *,
+    tile_l: int,
+    tile_c: int,
+    numeric_dims: tuple[int, ...],
+    cat_segments: tuple[tuple[int, int], ...],
+    n_adv: int,
+    interpret: bool,
+):
+    l, d = leaf_lo.shape
+    c = q_lo.shape[0]
+    b = leaf_cat.shape[1]
+    a = leaf_advt.shape[1]
+    grid = (c // tile_c, l // tile_l)  # leaf axis innermost (accumulator)
+    kernel = functools.partial(
+        _intersect_kernel,
+        numeric_dims=numeric_dims,
+        cat_segments=cat_segments,
+        n_adv=n_adv,
+    )
+    leaf_spec = lambda width: pl.BlockSpec(
+        (tile_l, width), lambda j, i: (i, 0)
+    )
+    conj_spec = lambda width: pl.BlockSpec(
+        (tile_c, width), lambda j, i: (j, 0)
+    )
+    hits, scanned = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            leaf_spec(d),  # leaf_lo
+            leaf_spec(d),  # leaf_hi
+            leaf_spec(b),  # leaf_cat
+            leaf_spec(a),  # leaf_advt
+            leaf_spec(a),  # leaf_advf
+            leaf_spec(1),  # leaf_size
+            conj_spec(d),  # q_lo
+            conj_spec(d),  # q_hi
+            conj_spec(b),  # q_cat
+            conj_spec(a),  # q_reqt
+            conj_spec(a),  # q_reqf
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_l, tile_c), lambda j, i: (i, j)),
+            pl.BlockSpec((1, tile_c), lambda j, i: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, c), jnp.float32),
+            jax.ShapeDtypeStruct((1, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        leaf_lo, leaf_hi, leaf_cat, leaf_advt, leaf_advf, leaf_size,
+        q_lo, q_hi, q_cat, q_reqt, q_reqf,
+    )
+    return hits, scanned

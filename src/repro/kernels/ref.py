@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas kernels (same inputs, no tiling).
+
+These are the correctness references the kernel tests sweep against; the
+end-to-end semantic oracle is ``FrozenQdTree.route`` / ``query.
+conjuncts_intersect`` (numpy), which ``ops.py`` wires up identically.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def eval_cuts_ref(
+    records_f32,  # (M, D)
+    dim_onehot,  # (D, C)
+    cutpoint,  # (1, C)
+    in_mask_t,  # (B, C)
+    is_cat_row,  # (1, D)
+    cat_offset_row,  # (1, D)
+    adv_cols,  # (A3, 3)
+    adv_sel,  # (A3, C)
+    kind_row,  # (1, C)
+    n_adv: int,
+):
+    m, d = records_f32.shape
+    vals = records_f32 @ dim_onehot
+    rng = (vals < cutpoint).astype(jnp.float32)
+
+    bits = in_mask_t.shape[0]
+    bitpos = records_f32 + cat_offset_row  # (M, D)
+    onehots = (
+        bitpos[:, :, None] == jnp.arange(bits, dtype=jnp.float32)
+    ).astype(jnp.float32)
+    go = (onehots * is_cat_row[0][None, :, None]).sum(axis=1)  # (M, B)
+    inm = ((go @ in_mask_t) > 0.5).astype(jnp.float32)
+
+    c = vals.shape[1]
+    advm = jnp.zeros((m, c), jnp.float32)
+    if n_adv > 0:
+        res = []
+        for j in range(n_adv):
+            ca, op, cb = adv_cols[j, 0], adv_cols[j, 1], adv_cols[j, 2]
+            didx = jnp.arange(d, dtype=jnp.float32)
+            va = (records_f32 * (didx == ca)).sum(axis=1)
+            vb = (records_f32 * (didx == cb)).sum(axis=1)
+            t = jnp.select(
+                [op == 0, op == 1, op == 2, op == 3, op == 4],
+                [va < vb, va <= vb, va > vb, va >= vb, va == vb],
+                va != vb,
+            )
+            res.append(t.astype(jnp.float32))
+        pad = adv_sel.shape[0] - n_adv
+        adv_res = jnp.stack(res, axis=1)
+        if pad:
+            adv_res = jnp.concatenate(
+                [adv_res, jnp.zeros((m, pad), jnp.float32)], axis=1
+            )
+        advm = adv_res @ adv_sel
+
+    return jnp.where(
+        kind_row == 0.0, rng, jnp.where(kind_row == 1.0, inm, advm)
+    )
+
+
+def locate_leaf_ref(m_mat, pathpos, pathneg, leafid):
+    viol = (1.0 - m_mat) @ pathpos + m_mat @ pathneg
+    hit = (viol < 0.5).astype(jnp.float32)
+    return hit @ leafid[0] - 1.0
+
+
+def query_intersect_ref(
+    leaf_lo, leaf_hi, leaf_cat, leaf_advt, leaf_advf, leaf_size,
+    q_lo, q_hi, q_cat, q_reqt, q_reqf,
+    numeric_dims, cat_segments, n_adv,
+):
+    tl, tc = leaf_lo.shape[0], q_lo.shape[0]
+    ok = jnp.ones((tl, tc), jnp.float32)
+    for d in numeric_dims:
+        lo = jnp.maximum(leaf_lo[:, d][:, None], q_lo[:, d][None, :])
+        hi = jnp.minimum(leaf_hi[:, d][:, None], q_hi[:, d][None, :])
+        ok = ok * (lo < hi).astype(jnp.float32)
+    for (s, e) in cat_segments:
+        shared = leaf_cat[:, s:e] @ q_cat[:, s:e].T
+        ok = ok * (shared > 0.5).astype(jnp.float32)
+    for a in range(n_adv):
+        ok = ok * (
+            1.0 - q_reqt[:, a][None, :] * (1.0 - leaf_advt[:, a][:, None])
+        )
+        ok = ok * (
+            1.0 - q_reqf[:, a][None, :] * (1.0 - leaf_advf[:, a][:, None])
+        )
+    scanned = leaf_size.T @ ok
+    return ok, scanned

@@ -1,0 +1,222 @@
+"""Pallas TPU kernels for batched record routing (paper Sec 3.1).
+
+TPU adaptation (DESIGN.md §3): the paper's CPU router chases pointers down
+the tree.  On TPU we factorize routing into two dense, gather-free kernels:
+
+  1. ``eval_cuts_kernel`` — evaluate *every* candidate cut for a record tile:
+       * column selection as a one-hot matmul (MXU),
+       * IN-set membership as a global categorical one-hot (iota compares,
+         VPU) times the packed membership masks (MXU),
+       * advanced (col-vs-col) predicates as static column slices (VPU).
+  2. ``locate_leaf_kernel`` — the *path-constraint* reformulation of tree
+     descent: leaf ``l`` owns record ``r`` iff r's predicate vector M[r]
+     satisfies every (cut, direction) constraint on l's root path, i.e.
+
+         viol[r, l] = (1 - M[r]) @ PathPos[:, l] + M[r] @ PathNeg[:, l] == 0
+
+     Two MXU matmuls replace ``depth`` sequential gathers; the unique
+     zero-violation leaf is recovered with a weighted mask reduction.
+
+All integer data is dictionary-encoded and must satisfy dom < 2**24 so
+float32 MXU arithmetic is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: predicate-matrix evaluation
+# ---------------------------------------------------------------------------
+def _eval_cuts_kernel(
+    # inputs (VMEM refs)
+    records_ref,  # (TM, D) f32 — record tile (dictionary codes)
+    dim_onehot_ref,  # (D, C) f32 — one-hot of each cut's column
+    cutpoint_ref,  # (1, C) f32
+    in_mask_ref,  # (B, C) f32 — transposed IN membership masks
+    cat_onehot_dims_ref,  # (1, D) f32 — 1.0 where dim is categorical
+    cat_offset_ref,  # (1, D) f32 — bit-space offset per dim (0 for numeric)
+    adv_cols_ref,  # (A3, 3) f32 — rows: (col_a, op, col_b); A3 = max(n_adv,1)
+    adv_sel_ref,  # (A3, C) f32 — one-hot map adv id -> cut column
+    kind_ref,  # (1, C) f32 — cut kind per column
+    # outputs
+    m_ref,  # (TM, C) f32 — predicate matrix tile (0.0 / 1.0)
+    *,
+    n_adv: int,
+    n_cat_bits: int,
+):
+    records = records_ref[...]  # (TM, D)
+    tm = records.shape[0]
+
+    # -- range cuts: select each cut's column, compare against cutpoint ----
+    vals = jnp.dot(
+        records, dim_onehot_ref[...], preferred_element_type=jnp.float32
+    )  # (TM, C)
+    rng = (vals < cutpoint_ref[...]).astype(jnp.float32)
+
+    # -- IN cuts: global categorical one-hot  ×  membership masks ----------
+    # GO[r, b] = 1 iff some categorical dim d has records[r, d] + off_d == b.
+    # in_mask rows are zero outside their own dim segment, so the cross-dim
+    # bits never contribute to the product.
+    bit_iota = jax.lax.broadcasted_iota(jnp.float32, (tm, n_cat_bits), 1)
+    bitpos = records + cat_offset_ref[...]  # (TM, D); junk for numeric dims
+    is_cat = cat_onehot_dims_ref[...]  # (1, D)
+    go = jnp.zeros((tm, n_cat_bits), jnp.float32)
+    d_total = records.shape[1]
+    for d in range(d_total):  # static loop over table columns
+        hit = (bit_iota == bitpos[:, d][:, None]).astype(jnp.float32)
+        go = go + hit * is_cat[0, d]
+    inm = jnp.dot(go, in_mask_ref[...], preferred_element_type=jnp.float32)
+    inm = (inm > 0.5).astype(jnp.float32)
+
+    # -- advanced cuts: static small loop over binary predicates -----------
+    c = vals.shape[1]
+    advm = jnp.zeros((tm, c), jnp.float32)
+    if n_adv > 0:
+        adv_res = jnp.zeros((tm, adv_sel_ref.shape[0]), jnp.float32)
+        for j in range(n_adv):  # n_adv is small and static (paper Sec 6.1)
+            col_a = adv_cols_ref[j, 0]
+            op = adv_cols_ref[j, 1]
+            col_b = adv_cols_ref[j, 2]
+            # one-hot select the two columns (dynamic col id, static loop j)
+            d_iota = jax.lax.broadcasted_iota(jnp.float32, (tm, d_total), 1)
+            va = jnp.sum(
+                records * (d_iota == col_a).astype(jnp.float32), axis=1
+            )
+            vb = jnp.sum(
+                records * (d_iota == col_b).astype(jnp.float32), axis=1
+            )
+            t = jnp.select(
+                [op == 0, op == 1, op == 2, op == 3, op == 4],
+                [va < vb, va <= vb, va > vb, va >= vb, va == vb],
+                va != vb,
+            ).astype(jnp.float32)
+            adv_res = adv_res.at[:, j].set(t)
+        advm = jnp.dot(
+            adv_res, adv_sel_ref[...], preferred_element_type=jnp.float32
+        )
+
+    kind = kind_ref[...]  # (1, C): 0 range, 1 in, 2 adv
+    out = jnp.where(kind == 0.0, rng, jnp.where(kind == 1.0, inm, advm))
+    m_ref[...] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_m", "n_cat_bits", "n_adv", "interpret")
+)
+def eval_cuts_pallas(
+    records_f32: jnp.ndarray,  # (M, D) f32, M % tile_m == 0
+    dim_onehot: jnp.ndarray,  # (D, C)
+    cutpoint: jnp.ndarray,  # (1, C)
+    in_mask_t: jnp.ndarray,  # (B, C)
+    is_cat_row: jnp.ndarray,  # (1, D)
+    cat_offset_row: jnp.ndarray,  # (1, D)
+    adv_cols: jnp.ndarray,  # (A3, 3)
+    adv_sel: jnp.ndarray,  # (A3, C)
+    kind_row: jnp.ndarray,  # (1, C)
+    *,
+    tile_m: int,
+    n_cat_bits: int,
+    n_adv: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    m, d = records_f32.shape
+    c = dim_onehot.shape[1]
+    grid = (m // tile_m,)
+    kernel = functools.partial(
+        _eval_cuts_kernel, n_adv=n_adv, n_cat_bits=n_cat_bits
+    )
+    full = lambda *shape: [pl.BlockSpec(shape, lambda i: (0,) * len(shape))]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),  # records
+            *full(d, c),  # dim_onehot
+            *full(1, c),  # cutpoint
+            *full(in_mask_t.shape[0], c),  # in_mask^T
+            *full(1, d),  # is_cat
+            *full(1, d),  # cat_offset
+            *full(adv_cols.shape[0], 3),  # adv_cols
+            *full(adv_sel.shape[0], c),  # adv_sel
+            *full(1, c),  # kind
+        ],
+        out_specs=pl.BlockSpec((tile_m, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.float32),
+        interpret=interpret,
+    )(
+        records_f32,
+        dim_onehot,
+        cutpoint,
+        in_mask_t,
+        is_cat_row,
+        cat_offset_row,
+        adv_cols,
+        adv_sel,
+        kind_row,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: path-constraint leaf location
+# ---------------------------------------------------------------------------
+def _locate_leaf_kernel(
+    m_ref,  # (TM, C) f32 — predicate-matrix tile
+    pathpos_ref,  # (C, TL) f32 — 1 iff leaf's path requires cut true
+    pathneg_ref,  # (C, TL) f32 — 1 iff leaf's path requires cut false
+    leafid_ref,  # (1, TL) f32 — global leaf index + 1 (0 ⇒ padding)
+    out_ref,  # (TM, 1) f32 — accumulates (bid + 1) of the unique hit
+):
+    l_step = pl.program_id(1)
+
+    @pl.when(l_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = m_ref[...]
+    viol = jnp.dot(
+        1.0 - m, pathpos_ref[...], preferred_element_type=jnp.float32
+    ) + jnp.dot(m, pathneg_ref[...], preferred_element_type=jnp.float32)
+    hit = (viol < 0.5).astype(jnp.float32)  # (TM, TL)
+    # each record matches exactly one (unpadded) leaf across all L tiles
+    partial = jnp.dot(
+        hit, leafid_ref[...].T, preferred_element_type=jnp.float32
+    )  # (TM, 1)
+    out_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_m", "tile_l", "interpret")
+)
+def locate_leaf_pallas(
+    m_mat: jnp.ndarray,  # (M, C) f32
+    pathpos: jnp.ndarray,  # (C, L) f32
+    pathneg: jnp.ndarray,  # (C, L) f32
+    leafid: jnp.ndarray,  # (1, L) f32 — bid + 1, zero on padded columns
+    *,
+    tile_m: int,
+    tile_l: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    m, c = m_mat.shape
+    l = pathpos.shape[1]
+    grid = (m // tile_m, l // tile_l)
+    out = pl.pallas_call(
+        _locate_leaf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((c, tile_l), lambda i, j: (0, j)),
+            pl.BlockSpec((c, tile_l), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tile_l), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(m_mat, pathpos, pathneg, leafid)
+    return out[:, 0] - 1.0  # back to 0-based BIDs; padding rows ⇒ -1

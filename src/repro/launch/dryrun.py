@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape) cell this lowers + compiles the
+real step function on the production mesh — 16×16 single-pod and 2×16×16
+multi-pod — and records:
+
+  * memory_analysis()  (per-device bytes: proves the cell fits),
+  * cost_analysis()    (HLO FLOPs / bytes),
+  * the collective inventory parsed from the post-SPMD HLO,
+  * per-step cost terms extrapolated from 1-group/2-group unrolled
+    variants (XLA cost analysis counts while bodies once — hlo.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--resume] [--multi-pod-only]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _cell_json(arch: str, shape: str, multi_pod: bool) -> pathlib.Path:
+    pod = "multipod" if multi_pod else "singlepod"
+    return RESULTS / f"{arch}__{shape}__{pod}.json"
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        k: getattr(mem, k)
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             with_cost: bool = True, cost_only: bool = False) -> dict:
+    # imports deferred until after XLA_FLAGS is set
+    import jax
+    from repro.configs import get_config
+    from repro.launch import hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import build_cell, lower_cell
+    from repro.models import model as model_lib
+    from repro.models import transformer
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "jax_version": jax.__version__,
+    }
+
+    if cost_only:
+        # refresh cost_terms on an existing record (skip the full compile)
+        prev = _cell_json(arch, shape_name, multi_pod)
+        if prev.exists():
+            record = json.loads(prev.read_text())
+    else:
+        # ---- full-fidelity compile: scanned stack, real chunking --------
+        t0 = time.perf_counter()
+        cell = build_cell(cfg, shape_name, mesh)
+        lowered = lower_cell(cell, mesh)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        print(mem)
+        cost_full = hlo.cost_dict(compiled)
+        print({k: cost_full.get(k) for k in ("flops", "bytes accessed")})
+        text = compiled.as_text()
+        coll_full = hlo.parse_collectives(text)
+        record.update(
+            step=cell.step_name,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_dict(mem),
+            cost_scanned=({k: cost_full.get(k) for k in
+                           ("flops", "bytes accessed")}),
+            collectives_scanned=coll_full,
+            hlo_bytes=len(text),
+        )
+        del compiled, lowered, text
+
+    # ---- per-step cost terms via 1g/2g unrolled extrapolation -----------
+    if with_cost:
+        period = (
+            1 if cfg.is_encdec
+            else len(transformer.layer_program(cfg))
+        )
+        ng = (
+            cfg.n_layers if cfg.is_encdec else transformer.n_groups(cfg)
+        )
+        samples = {}
+        for g in (1, 2):
+            vcfg = dataclasses.replace(
+                cfg,
+                n_layers=period * g,
+                encoder_layers=(g if cfg.is_encdec else cfg.encoder_layers),
+                scan_unroll=True,
+                attn_chunk=8192,
+                ssd_chunk=2048,
+                # microbatching splits the same math across a scan whose
+                # body XLA costs once; count the full batch instead
+                microbatches=1,
+            )
+            vcell = build_cell(vcfg, shape_name, mesh)
+            vlow = lower_cell(vcell, mesh)
+            vcomp = vlow.compile()
+            c = hlo.cost_dict(vcomp)
+            vtext = vcomp.as_text()
+            coll = hlo.parse_collectives(vtext)
+            samples[g] = {
+                "flops": float(c.get("flops", 0.0)),
+                "bytes": float(c.get("bytes accessed", 0.0)),
+                "fused_bytes": float(hlo.fused_bytes_estimate(vtext)),
+                "coll_bytes": float(hlo.total_collective_bytes(coll)),
+                "coll": coll,
+            }
+            del vcomp, vlow, vtext
+        keys = ("flops", "bytes", "fused_bytes", "coll_bytes")
+        body = {k: samples[2][k] - samples[1][k] for k in keys}
+        outside = {k: max(samples[1][k] - body[k], 0.0)
+                   for k in body}
+        total = {k: outside[k] + ng * max(body[k], 0.0) for k in body}
+        record["cost_terms"] = {
+            "per_group": body,
+            "outside": outside,
+            "n_groups": ng,
+            "total_flops": total["flops"],
+            "total_bytes": total["bytes"],
+            "total_fused_bytes": total["fused_bytes"],
+            "total_collective_bytes": total["coll_bytes"],
+            "collectives_1g": samples[1]["coll"],
+            "collectives_2g": samples[2]["coll"],
+        }
+        record["model_flops"] = model_lib.model_flops_per_token(cfg)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the cost-extrapolation variants")
+    ap.add_argument("--cost-only", action="store_true",
+                    help="recompute cost_terms on existing records only")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        # one subprocess per cell: isolates XLA state/memory per compile
+        from repro.configs import runnable_cells
+
+        cells = [
+            (a, s, mp)
+            for (a, s) in runnable_cells()
+            for mp in (False, True)
+        ]
+        failed = []
+        for arch, shape, mp in cells:
+            out = _cell_json(arch, shape, mp)
+            if args.resume and out.exists():
+                print(f"skip {out.name}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape,
+            ]
+            if mp:
+                # the roofline cost table is single-pod (§Roofline); the
+                # multi-pod pass proves the pod axis shards + reports memory
+                cmd += ["--multi-pod", "--no-cost"]
+            if args.no_cost and "--no-cost" not in cmd:
+                cmd.append("--no-cost")
+            print(f"=== {arch} × {shape} × "
+                  f"{'multi' if mp else 'single'}pod ===", flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=3600)
+                code = r.returncode
+            except subprocess.TimeoutExpired:
+                code = -1
+                print("TIMEOUT")
+            if code:
+                failed.append((arch, shape, mp))
+        print(f"done; {len(failed)} failures: {failed}")
+        sys.exit(1 if failed else 0)
+
+    record = run_cell(
+        args.arch, args.shape, args.multi_pod,
+        with_cost=not args.no_cost, cost_only=args.cost_only,
+    )
+    out = _cell_json(args.arch, args.shape, args.multi_pod)
+    out.write_text(json.dumps(record, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

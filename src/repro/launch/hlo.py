@@ -1,0 +1,160 @@
+"""Post-SPMD HLO text analysis: collective inventory + operand bytes.
+
+``compiled.cost_analysis()`` has no collective-bytes term, so we parse the
+optimized per-device HLO: every ``all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute`` op (sync or ``-start`` async form)
+contributes the byte size of its operands (per-device shard shapes, i.e.
+bytes leaving the device, modulo algorithm constants).
+
+NOTE (documented in EXPERIMENTS.md §Roofline): XLA's cost analysis counts a
+``while`` body ONCE — it does not multiply by trip count — and the same
+holds for text parsing of scanned models.  The dry-run therefore derives
+per-step cost terms from 1-group/2-group *unrolled* variants and
+extrapolates linearly in the group count; the scanned full-model compile is
+used for memory analysis and compile-validity only.
+"""
+
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+([^(]*?)([\w\-]+)\(")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+_OP = re.compile(
+    r"=\s+[^=]*?\b(" + "|".join(COLLECTIVES) + r")(-start)?\("
+)
+
+
+def tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_bytes(segment: str) -> int:
+    return sum(tensor_bytes(dt, dims) for dt, dims in _SHAPE.findall(segment))
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """→ {kind: {"count": int, "bytes": int}} summed over op *operands*.
+
+    Optimized HLO prints operands as bare names (``all-reduce(%dot)``), so
+    a first pass builds a name → output-bytes symbol table; collective
+    operand bytes are resolved through it.  Async ``-done`` ops (whose
+    operand is the ``-start`` tuple) are skipped to avoid double counting.
+    """
+    sizes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2))
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in lines:
+        m = _OP.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operands = line[start : i - 1]
+        b = _shape_bytes(operands)  # older dumps: inline operand shapes
+        if b == 0:
+            b = sum(
+                sizes.get(name, 0)
+                for name in _OPERAND_NAME.findall(operands)
+            )
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    return out
+
+
+def total_collective_bytes(coll: dict) -> int:
+    return sum(v["bytes"] for v in coll.values())
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+# ops that still touch HBM after TPU-grade fusion (elementwise/broadcast/
+# reduce chains fuse into their consumers; these don't)
+_MEM_OPS = (
+    "dot", "convolution", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "copy", "transpose",
+    "sort", "fusion",
+) + COLLECTIVES
+_MEM_DEF = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s+=\s+([^(]*?)(" +
+    "|".join(_MEM_OPS) + r")(-start)?\("
+)
+
+
+def fused_bytes_estimate(hlo_text: str) -> int:
+    """Approximate post-fusion HBM traffic from the per-device HLO.
+
+    XLA:CPU fuses far less than XLA:TPU, so ``cost_analysis()['bytes
+    accessed']`` counts every elementwise intermediate at full size.  This
+    estimate sums operand+output bytes ONLY for ops that remain memory
+    ops after TPU fusion (matmuls, copies/transposes, gathers/scatters,
+    dynamic slices, sorts, existing fusions, collectives) — elementwise
+    and broadcast/reduce chains are assumed fused into their consumers.
+    Documented in EXPERIMENTS.md §Roofline methodology.
+    """
+    sizes: dict[str, int] = {}
+    total = 0
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2))
+    for line in lines:
+        m = _MEM_DEF.match(line)
+        if not m:
+            continue
+        out_b = _shape_bytes(m.group(1))
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operands = line[start : i - 1]
+        in_b = sum(
+            sizes.get(name, 0) for name in _OPERAND_NAME.findall(operands)
+        )
+        total += out_b + in_b
+    return total

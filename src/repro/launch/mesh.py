@@ -1,0 +1,29 @@
+"""Production meshes.
+
+All mesh construction lives behind functions so importing this module never
+touches jax device state (the dry-run driver must set XLA_FLAGS before any
+jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mesh(shape, axes):
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1, pod: int | None = None):
+    """Tiny CPU mesh for tests (1 device by default)."""
+    if pod:
+        return _mesh((pod, data, model), ("pod", "data", "model"))
+    return _mesh((data, model), ("data", "model"))

@@ -1,0 +1,205 @@
+"""Per-cell (arch × input-shape) abstract inputs + step builders.
+
+``build_cell`` returns everything the dry-run / drivers need to lower a
+cell: the step function, ShapeDtypeStruct arguments, in/out shardings, and
+donation indices.  Shapes lower:
+
+  train_4k     → train_step (fwd+bwd+AdamW)
+  prefill_32k  → serve_prefill (forward + cache emission)
+  decode_32k   → serve_step (one token against a seq_len KV cache)
+  long_500k    → serve_step, batch=1, sequence-sharded caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, InputShape, ModelConfig
+from repro.models import encdec, model
+from repro.sharding.specs import (
+    LONG_CONTEXT_OVERRIDES,
+    Rules,
+    fitted_shardings,
+    use_mesh,
+)
+from repro.train import steps
+from repro.train.optimizer import AdamWConfig
+from repro.train.schedule import ScheduleConfig
+
+IS_AXES = lambda x: isinstance(x, tuple) and all(
+    isinstance(e, (str, type(None))) for e in x
+)
+
+
+def rules_for_shape(shape: InputShape) -> Rules:
+    if shape.name == "long_500k":
+        over = dict(LONG_CONTEXT_OVERRIDES)
+        over["seq_sp"] = None  # decode: S=1, nothing to sequence-shard
+        return Rules.make(over)
+    if shape.kind == "decode":
+        # decode caches shard their sequence dim over `model` — robust to
+        # any kv-head count (GQA kv heads rarely divide a 16-way TP axis)
+        return Rules.make({"seq_sp": None, "cache_seq": ("model",)})
+    return Rules.make()
+
+
+def shaped_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Bind shape-dependent knobs (learned-pos table size)."""
+    if cfg.pos_embed == "learned" and cfg.max_positions < shape.seq_len:
+        cfg = dataclasses.replace(cfg, max_positions=shape.seq_len)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# abstract batches
+# ---------------------------------------------------------------------------
+def train_batch_abstract(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    spc = {"tokens": ("batch", None), "labels": ("batch", None)}
+    dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    if cfg.n_image_patches:
+        sds["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_image_patches, cfg.d_model), dt
+        )
+        spc["patches"] = ("batch", None, "embed")
+    if cfg.is_encdec:
+        sds["frames"] = jax.ShapeDtypeStruct(
+            (b, encdec.N_FRAMES, cfg.d_model), dt
+        )
+        spc["frames"] = ("batch", None, "embed")
+    return sds, spc
+
+
+def prefill_batch_abstract(cfg: ModelConfig, shape: InputShape):
+    sds, spc = train_batch_abstract(cfg, shape)
+    sds.pop("labels")
+    spc.pop("labels")
+    return sds, spc
+
+
+def caches_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    box = {}
+
+    def go(_):
+        caches, cspecs = model.init_caches(cfg, batch, max_seq)
+        box["s"] = cspecs
+        return caches
+
+    shapes = jax.eval_shape(go, 0)
+    return shapes, box["s"]
+
+
+# ---------------------------------------------------------------------------
+# cell builder
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: InputShape
+    cfg: ModelConfig
+    rules: Rules
+    step_name: str  # train_step | serve_prefill | serve_step
+    fn: object
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: object
+    donate: tuple
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    ocfg: AdamWConfig | None = None,
+    scfg: ScheduleConfig | None = None,
+    rules: Rules | None = None,
+) -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = shaped_config(cfg, shape)
+    rules = rules or rules_for_shape(shape)
+    ocfg = ocfg or AdamWConfig(eight_bit=cfg.opt_8bit)
+    scfg = scfg or ScheduleConfig()
+
+    if shape.kind == "train":
+        state_shapes, state_specs = steps.abstract_state(cfg, ocfg)
+        batch_sds, batch_specs = train_batch_abstract(cfg, shape)
+        fn = functools.partial(
+            steps.train_step, cfg=cfg, ocfg=ocfg, scfg=scfg
+        )
+        state_sh = fitted_shardings(state_shapes, state_specs, mesh, rules)
+        batch_sh = fitted_shardings(batch_sds, batch_specs, mesh, rules)
+        return Cell(
+            arch=cfg.name, shape=shape, cfg=cfg, rules=rules,
+            step_name="train_step", fn=fn,
+            args=(state_shapes, batch_sds),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate=(0,),
+        )
+
+    # params only (no optimizer) for serving cells
+    box = {}
+
+    def go(key):
+        p, s = model.init_model(key, cfg)
+        box["s"] = s
+        return p
+
+    param_shapes = jax.eval_shape(go, jax.random.PRNGKey(0))
+    param_sh = fitted_shardings(param_shapes, box["s"], mesh, rules)
+
+    if shape.kind == "prefill":
+        batch_sds, batch_specs = prefill_batch_abstract(cfg, shape)
+        batch_sh = fitted_shardings(batch_sds, batch_specs, mesh, rules)
+        fn = functools.partial(steps.serve_prefill, cfg=cfg)
+        return Cell(
+            arch=cfg.name, shape=shape, cfg=cfg, rules=rules,
+            step_name="serve_prefill", fn=fn,
+            args=(param_shapes, batch_sds),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=None,
+            donate=(),
+        )
+
+    # decode: one token against a seq_len cache
+    b = shape.global_batch
+    cache_sds, cache_specs = caches_abstract(cfg, b, shape.seq_len)
+    cache_sh = fitted_shardings(cache_sds, cache_specs, mesh, rules)
+    token_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    token_sh = fitted_shardings(
+        {"t": token_sds}, {"t": ("batch", None)}, mesh, rules
+    )["t"]
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = functools.partial(steps.serve_step, cfg=cfg)
+    return Cell(
+        arch=cfg.name, shape=shape, cfg=cfg, rules=rules,
+        step_name="serve_step", fn=fn,
+        args=(param_shapes, cache_sds, token_sds, pos_sds),
+        in_shardings=(param_sh, cache_sh, token_sh, None),
+        out_shardings=(token_sh, None, cache_sh),
+        donate=(1,),
+    )
+
+
+def lower_cell(cell: Cell, mesh):
+    """jit + lower under the cell's mesh/rules context."""
+
+    def traced(*args):
+        with use_mesh(mesh, cell.rules):
+            return cell.fn(*args)
+
+    jitted = jax.jit(
+        traced,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate,
+    )
+    return jitted.lower(*cell.args)

@@ -1,0 +1,172 @@
+"""End-to-end training driver: qd-tree data pipeline → sharded train loop.
+
+The paper's layout engine is the data tier: records are laid out by a
+greedy/WOODBLOCK qd-tree into a block store; a curation query selects the
+training mixture and the qd-tree prunes non-matching blocks before any I/O;
+blocks feed the elastic scheduler → tokenizer → train step.
+
+On this CPU container the driver defaults to a reduced config; pass
+``--full-arch`` to build the real config (only sensible on a TPU fleet).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-32b \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import greedy
+from repro.core.query import InAtom, Query
+from repro.data import datagen, workload as wl
+from repro.data.blocks import BlockStore
+from repro.data.pipeline import PipelineConfig, QdTreePipeline
+from repro.launch.mesh import make_smoke_mesh
+from repro.sharding.specs import Rules
+from repro.train import steps
+from repro.train.loop import LoopConfig, maybe_restore, train_loop
+from repro.train.optimizer import AdamWConfig
+from repro.train.schedule import ScheduleConfig
+
+
+def build_data_tier(tmp: str, n_rows: int, block: int, seed: int = 0):
+    """Synthetic corpus + workload → greedy qd-tree → block store."""
+    schema, records = datagen.make_errorlog_int(n_rows, seed=seed)
+    work, _ = wl.make_errorlog_int_workload(schema, n_queries=50, seed=seed)
+    cuts = work.candidate_cuts()
+    tree = greedy.build_greedy(
+        records, work, cuts, greedy.GreedyConfig(min_block=block)
+    )
+    store = BlockStore.create(
+        pathlib.Path(tmp) / "blocks", tree.freeze(), records
+    )
+    return schema, store
+
+
+def batches_from_pipeline(store, schema, batch: int, seq: int, vocab: int,
+                          curated: bool, epochs: int = 1_000_000):
+    """Infinite batch iterator with qd-tree block skipping."""
+    curation = None
+    if curated:
+        # the mixture filter: only valid events of the two dominant types
+        curation = Query.conjunction([
+            InAtom(schema.dim("event_type"), (0, 1)),
+            InAtom(schema.dim("is_valid"), (1,)),
+        ])
+    cfg = PipelineConfig(
+        batch_size=batch, seq_len=seq, vocab=vocab,
+        curation_query=curation, epochs=epochs,
+    )
+    pipe = QdTreePipeline(store, cfg)
+    print(
+        f"pipeline: {store.tree.n_leaves} blocks, "
+        f"{pipe.blocks_skipped} skipped by the curation query"
+    )
+
+    def gen():
+        import jax.numpy as jnp
+
+        while True:
+            for toks, labels in pipe:
+                yield {
+                    "tokens": jnp.asarray(toks),
+                    "labels": jnp.asarray(labels),
+                }
+
+    return gen()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-32b")
+    ap.add_argument("--full-arch", action="store_true",
+                    help="use the full config (TPU fleet only)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override reduced layer count")
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--rows", type=int, default=50_000)
+    ap.add_argument("--no-curation", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (restart demo)")
+    ap.add_argument("--data", type=int, default=1, help="data-axis size")
+    ap.add_argument("--model-par", type=int, default=1,
+                    help="model-axis size")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_arch:
+        over = {}
+        if args.layers:
+            over["n_layers"] = args.layers
+        if args.d_model:
+            over["d_model"] = args.d_model
+            over["head_dim"] = max(args.d_model // max(cfg.n_heads, 1), 8)
+        cfg = cfg.reduced(**over)
+    print(f"arch {cfg.name}: {cfg.n_layers}L d={cfg.d_model}")
+
+    mesh = make_smoke_mesh(data=args.data, model=args.model_par)
+    rules = Rules.make()
+    ocfg = AdamWConfig(eight_bit=cfg.opt_8bit)
+    scfg = ScheduleConfig(
+        peak_lr=3e-4, warmup_steps=max(args.steps // 10, 2),
+        total_steps=args.steps,
+    )
+
+    tmp = tempfile.mkdtemp(prefix="qdtree_data_")
+    schema, store = build_data_tier(
+        tmp, n_rows=args.rows, block=2_000, seed=args.seed
+    )
+    batches = batches_from_pipeline(
+        store, schema, args.batch, args.seq, cfg.vocab,
+        curated=not args.no_curation,
+    )
+
+    batch_sds = {
+        "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), np.int32),
+        "labels": jax.ShapeDtypeStruct((args.batch, args.seq), np.int32),
+    }
+    batch_specs = {"tokens": ("batch", None), "labels": ("batch", None)}
+    step_fn, state_shapes, state_sh, _ = steps.jit_train_step(
+        cfg, ocfg, scfg, mesh, rules, batch_sds, batch_specs
+    )
+
+    state, start = maybe_restore(args.ckpt_dir, state_shapes, state_sh)
+    if state is None:
+        state = steps.init_train_state(jax.random.PRNGKey(args.seed), cfg,
+                                       ocfg)
+        state = jax.device_put(state, state_sh)
+        print("cold start")
+    else:
+        print(f"resumed from step {start}")
+
+    from repro.train.loop import FailureInjector
+
+    lcfg = LoopConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        log_every=5,
+    )
+    failure = FailureInjector(args.fail_at)
+    state, history = train_loop(step_fn, state, batches, lcfg, failure)
+    print(
+        f"done: step={int(np.asarray(state['step']))} "
+        f"final loss={history[-1]['loss']:.4f}"
+    )
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,278 @@
+"""GQA attention: full, KV-chunked (online-softmax), and decode-with-cache.
+
+Memory policy: anything ≥ ~8k sequence runs the chunked path — a double
+``lax.scan`` over (query-chunks × kv-chunks) carrying running max/denominator,
+i.e. FlashAttention expressed at the XLA level (the TPU MXU consumes the
+per-chunk matmuls; fusion and overlap are XLA's job — see DESIGN.md §3).
+Sharding: heads are tensor-parallel over ``model``; the residual stream is
+sequence-parallel; KV caches shard batch over ``data`` (and sequence over
+``data`` for the 512k cells via rule overrides).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init, split_tree
+from repro.sharding.specs import logical_constraint as wsc
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = common.pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    pairs = {
+        "wq": dense_init(ks[0], (d, h, hd), dt, ("fsdp", "heads", None)),
+        "wk": dense_init(ks[1], (d, kv, hd), dt, ("fsdp", "kv_heads", None)),
+        "wv": dense_init(ks[2], (d, kv, hd), dt, ("fsdp", "kv_heads", None)),
+        "wo": dense_init(
+            ks[3], (h, hd, d), dt, ("heads", None, "fsdp"),
+            scale=1.0 / jnp.sqrt(h * hd),
+        ),
+    }
+    if cfg.qkv_bias:
+        pairs["bq"] = ((jnp.zeros((h, hd), dt)), ("heads", None))
+        pairs["bk"] = ((jnp.zeros((kv, hd), dt)), ("kv_heads", None))
+        pairs["bv"] = ((jnp.zeros((kv, hd), dt)), ("kv_heads", None))
+    return split_tree(pairs)
+
+
+def _project_qkv(params, x, kv_x, positions, kv_positions, cfg: ModelConfig):
+    ct = common.cdtype(cfg)
+    xq = x.astype(ct)
+    xkv = (kv_x if kv_x is not None else x).astype(ct)
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(ct))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"].astype(ct))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(ct)
+        k = k + params["bk"].astype(ct)
+        v = v + params["bv"].astype(ct)
+    if cfg.pos_embed == "rope":
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, kv_positions, cfg.rope_theta)
+    q = wsc(q, ("batch", "seq", "heads", None))
+    k = wsc(k, ("batch", "seq", "kv_heads", None))
+    v = wsc(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _group_q(q, n_kv: int):
+    """(B,S,H,hd) → (B,S,KV,rep,hd) for GQA."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def full_attention(q, k, v, q_pos, k_pos, causal: bool):
+    """Reference path for short sequences; fp32 softmax."""
+    hd = q.shape[-1]
+    scores = jnp.einsum(
+        "bsgrh,btgh->bgrst", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        mask = q_pos[:, None, None, :, None] >= k_pos[:, None, None, None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgh->bsgrh", probs.astype(q.dtype), v)
+    return out
+
+
+def chunked_attention(
+    q, k, v, q_pos, k_pos, causal: bool, q_chunk: int, kv_chunk: int,
+    unroll: bool = False,
+):
+    """Online-softmax attention: O(S·chunk) live memory.
+
+    q: (B,S,KV,rep,hd); k/v: (B,T,KV,hd); q_pos (B,S); k_pos (B,T).
+    """
+    b, s, g, r, hd = q.shape
+    t = k.shape[1]
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    # pad both sequence sides to chunk multiples; padded KV positions get a
+    # +inf-like sentinel so they are masked under causal AND non-causal
+    # attention (whisper cross-attends to 1500 frames — not a 2^k multiple)
+    SENTINEL = jnp.int32(2**30)
+    s_pad = (-s) % q_chunk
+    t_pad = (-t) % kv_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, s_pad)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(
+            k_pos, ((0, 0), (0, t_pad)), constant_values=SENTINEL
+        )
+    s_full, t_full = s + s_pad, t + t_pad
+    nq, nk = s_full // q_chunk, t_full // kv_chunk
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qs = q.reshape(b, nq, q_chunk, g, r, hd).swapaxes(0, 1)
+    qp = q_pos.reshape(b, nq, q_chunk).swapaxes(0, 1)
+    ks = k.reshape(b, nk, kv_chunk, g, hd).swapaxes(0, 1)
+    vs = v.reshape(b, nk, kv_chunk, g, hd).swapaxes(0, 1)
+    kp = k_pos.reshape(b, nk, kv_chunk).swapaxes(0, 1)
+
+    def q_step(_, q_blk):
+        qc, qpc = q_blk  # (b, qc, g, r, hd), (b, qc)
+
+        def kv_step(carry, kv_blk):
+            m, l, acc = carry
+            kc, vc, kpc = kv_blk
+            s_blk = (
+                jnp.einsum(
+                    "bsgrh,btgh->bgrst", qc, kc,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )  # (b, g, r, qc, kc)
+            valid = (kpc < SENTINEL)[:, None, None, None, :]
+            if causal:
+                valid = valid & (
+                    qpc[:, None, None, :, None]
+                    >= kpc[:, None, None, None, :]
+                )
+            s_blk = jnp.where(valid, s_blk, NEG_INF)
+            m_new = jnp.maximum(m, s_blk.max(axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrst,btgh->bgrsh", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, r, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, r, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, g, r, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks, vs, kp), unroll=unroll
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (b, g, r, qc, hd)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (b, qc, g, r, hd)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (qs, qp), unroll=unroll
+    )  # (nq, b, qc, g, r, hd)
+    out = outs.swapaxes(0, 1).reshape(b, s_full, g, r, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+def attn_forward(
+    params,
+    x,
+    positions,
+    cfg: ModelConfig,
+    causal: bool = True,
+    kv_x=None,
+    kv_positions=None,
+    return_kv: bool = False,
+):
+    """Train/prefill attention.  x: (B,S,D) → (B,S,D).
+
+    ``return_kv=True`` additionally returns (k, v) as (B, KV, S, hd) — the
+    cache layout — so prefill populates decode caches for free.
+    """
+    if kv_positions is None:
+        kv_positions = positions
+    q, k, v = _project_qkv(params, x, kv_x, positions, kv_positions, cfg)
+    qg = _group_q(q, cfg.n_kv_heads)
+    s, t = x.shape[1], k.shape[1]
+    if max(s, t) > 2 * cfg.attn_chunk:
+        out = chunked_attention(
+            qg, k, v, positions, kv_positions, causal,
+            q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+            unroll=cfg.scan_unroll,
+        )
+    else:
+        out = full_attention(qg, k, v, positions, kv_positions, causal)
+    b = x.shape[0]
+    out = out.reshape(b, s, cfg.n_heads, cfg.hd)
+    out = wsc(out, ("batch", "seq", "heads", None))
+    ct = common.cdtype(cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(ct), params["wo"].astype(ct))
+    if return_kv:
+        return y, (k.swapaxes(1, 2), v.swapaxes(1, 2))
+    return y
+
+
+def cross_attn_cached(params, x, k_cache, v_cache, cfg: ModelConfig):
+    """Decode-time cross-attention against precomputed (B,KV,F,hd) K/V."""
+    ct = common.cdtype(cfg)
+    b = x.shape[0]
+    q = jnp.einsum(
+        "bsd,dhk->bshk", x.astype(ct), params["wq"].astype(ct)
+    )
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(ct)
+    qg = _group_q(q, cfg.n_kv_heads)  # (B,1,KV,rep,hd)
+    scores = jnp.einsum(
+        "bsgrh,bgth->bgrst", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) / jnp.sqrt(cfg.hd).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bgrst,bgth->bsgrh", probs.astype(v_cache.dtype), v_cache
+    )
+    out = out.reshape(b, 1, cfg.n_heads, cfg.hd)
+    return jnp.einsum(
+        "bshk,hkd->bsd", out.astype(ct), params["wo"].astype(ct)
+    )
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, n_layers: int):
+    """Stacked KV cache (n_layers leading dim, for scan) + logical specs."""
+    shape = (n_layers, batch, cfg.n_kv_heads, max_seq, cfg.hd)
+    axes = ("layers", "batch", "kv_heads", "cache_seq", None)
+    cache = {
+        "k": jnp.zeros(shape, common.cdtype(cfg)),
+        "v": jnp.zeros(shape, common.cdtype(cfg)),
+    }
+    specs = {"k": axes, "v": axes}
+    return cache, specs
+
+
+def attn_decode(params, x, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One-token decode.  x: (B,1,D); k/v_cache: (B,KV,S,hd); pos: scalar.
+
+    Returns (y (B,1,D), k_cache, v_cache) with the caches updated at ``pos``.
+
+    Cache write: a dynamic-update-slice at a traced position along the
+    SHARDED sequence dim makes GSPMD replicate the whole cache ("involuntary
+    full rematerialization" — tens of GB/device at decode_32k scale).  The
+    masked elementwise update below is partitionable in place: each shard
+    touches only its own slice (§Perf iteration, cell qwen1.5-32b×decode_32k).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, None, positions, positions, cfg)
+    # write the new entries at pos (masked update, sharding-preserving)
+    seq_iota = jax.lax.broadcasted_iota(jnp.int32, k_cache.shape, 2)
+    at_pos = seq_iota == pos
+    k_cache = jnp.where(at_pos, k.swapaxes(1, 2).astype(k_cache.dtype),
+                        k_cache)
+    v_cache = jnp.where(at_pos, v.swapaxes(1, 2).astype(v_cache.dtype),
+                        v_cache)
+    qg = _group_q(q, cfg.n_kv_heads)  # (B,1,KV,rep,hd)
+    scores = jnp.einsum(
+        "bsgrh,bgth->bgrst", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) / jnp.sqrt(cfg.hd).astype(jnp.float32)  # (B,KV,rep,1,S)
+    t_idx = jnp.arange(k_cache.shape[2])
+    mask = t_idx[None, None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bgrst,bgth->bsgrh", probs.astype(v_cache.dtype), v_cache
+    )
+    out = out.reshape(b, 1, cfg.n_heads, cfg.hd)
+    ct = common.cdtype(cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(ct), params["wo"].astype(ct))
+    return y, k_cache, v_cache

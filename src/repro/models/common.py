@@ -1,0 +1,123 @@
+"""Shared model components: norms, RoPE, param init with logical-axis specs.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+param pytree with tuples of logical axis names (resolved to PartitionSpecs
+by repro.sharding.specs).  Forward code is pure jnp; mixed precision policy:
+params live in ``cfg.param_dtype``, matmuls run in ``cfg.compute_dtype``,
+normalizations/softmax/losses in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def cdtype(cfg: ModelConfig):
+    return DTYPES[cfg.compute_dtype]
+
+
+def pdtype(cfg: ModelConfig):
+    return DTYPES[cfg.param_dtype]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, axes, scale=None):
+    """Truncated-normal init with fan-in scaling + logical axes."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * s
+    return w.astype(dtype), axes
+
+
+def zeros_init(shape, dtype, axes):
+    return jnp.zeros(shape, dtype), axes
+
+
+def split_tree(pairs: dict):
+    """{'name': (param, axes)} → (params dict, specs dict)."""
+    params = {k: v[0] for k, v in pairs.items()}
+    specs = {k: v[1] for k, v in pairs.items()}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy (fp32, label smoothing-free, z-loss optional)
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(
+    logits, labels, weights=None, z_loss_coef: float = 1e-4
+):
+    """logits (..., V) any dtype → fp32 loss; returns (loss, mean_nll).
+
+    ``weights`` (same shape as labels) masks positions (e.g. VLM image
+    slots); the mean is over the weighted token count.
+
+    The label log-prob is picked with a one-hot reduction rather than
+    ``take_along_axis``: logits are vocab-sharded (TP) and a gather along
+    the sharded axis makes GSPMD all-gather the whole logits tensor
+    (~13 GB/device at train_4k scale); the one-hot contraction keeps the
+    vocab axis sharded and lowers to a cheap masked psum (§Perf iteration 1).
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    v = lg.shape[-1]
+    hit = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, lg.shape, lg.ndim - 1
+    )
+    ll = jnp.sum(jnp.where(hit, lg, 0.0), axis=-1)
+    nll = lse - ll
+    z = z_loss_coef * (lse**2)
+    if weights is None:
+        return nll.mean() + z.mean(), nll.mean()
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    mean_nll = (nll * w).sum() / denom
+    return mean_nll + (z * w).sum() / denom, mean_nll

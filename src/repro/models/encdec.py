@@ -1,0 +1,238 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed frame embeddings (B, n_frames, d_model); the encoder adds
+learned positions and runs bidirectional self-attention layers.  The
+decoder is a causal stack with cross-attention to the encoder output.
+Both stacks are scanned (stacked layer params).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mlp
+from repro.models.common import dense_init, split_tree
+from repro.models.transformer import apply_norm, init_norm
+from repro.sharding.specs import logical_constraint as wsc
+
+N_FRAMES = 1500  # whisper's 30 s @ 50 Hz after the conv frontend
+
+
+def _stack_init(key, one_layer_fn, n_layers: int):
+    spec_box = {}
+
+    def shapes_only(k):
+        p, s = one_layer_fn(k)
+        spec_box["s"] = s
+        return p
+
+    keys = jax.random.split(key, n_layers)
+    jax.eval_shape(shapes_only, keys[0])
+    params = jax.vmap(lambda k: one_layer_fn(k)[0])(keys)
+    specs = jax.tree.map(
+        lambda axes: ("layers",) + axes,
+        spec_box["s"],
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    return params, specs
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = init_norm(cfg)
+    p["attn"], s["attn"] = attention.init_attention(ks[0], cfg)
+    p["ln2"], s["ln2"] = init_norm(cfg)
+    p["mlp"], s["mlp"] = mlp.init_mlp(ks[1], cfg)
+    return p, s
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = init_norm(cfg)
+    p["self"], s["self"] = attention.init_attention(ks[0], cfg)
+    p["ln_x"], s["ln_x"] = init_norm(cfg)
+    p["cross"], s["cross"] = attention.init_attention(ks[1], cfg)
+    p["ln2"], s["ln2"] = init_norm(cfg)
+    p["mlp"], s["mlp"] = mlp.init_mlp(ks[2], cfg)
+    return p, s
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    dt = common.pdtype(cfg)
+    maxp = cfg.max_positions or 4096
+    pairs = {
+        "enc_pos": dense_init(
+            ks[0], (N_FRAMES, cfg.d_model), dt, (None, "embed"), scale=0.02
+        ),
+        "tok_embed": dense_init(
+            ks[1], (cfg.vocab, cfg.d_model), dt, ("vocab", "embed"), scale=1.0
+        ),
+        "dec_pos": dense_init(
+            ks[2], (maxp, cfg.d_model), dt, (None, "embed"), scale=0.02
+        ),
+        "head": dense_init(
+            ks[3], (cfg.d_model, cfg.vocab), dt, ("embed", "vocab")
+        ),
+    }
+    params, specs = split_tree(pairs)
+    params["enc_ln"], specs["enc_ln"] = init_norm(cfg)
+    params["dec_ln"], specs["dec_ln"] = init_norm(cfg)
+    params["encoder"], specs["encoder"] = _stack_init(
+        ks[4], lambda k: _init_enc_layer(k, cfg), cfg.encoder_layers
+    )
+    params["decoder"], specs["decoder"] = _stack_init(
+        ks[5], lambda k: _init_dec_layer(k, cfg), cfg.n_layers
+    )
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+def encode(params, frames, cfg: ModelConfig):
+    """frames (B, F, D) stub embeddings → (B, F, D) encoder states."""
+    ct = common.cdtype(cfg)
+    b, f, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+    x = frames.astype(ct) + params["enc_pos"][None, :f].astype(ct)
+    x = wsc(x, ("batch", "seq_sp", "embed"))
+
+    def body(x, lp):
+        h = apply_norm(lp["ln1"], x, cfg)
+        x = x + attention.attn_forward(
+            lp["attn"], h, positions, cfg, causal=False
+        )
+        h = apply_norm(lp["ln2"], x, cfg)
+        x = x + mlp.mlp_forward(lp["mlp"], h, cfg)
+        x = wsc(x, ("batch", "seq_sp", "embed"))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=cfg.scan_unroll)
+    return apply_norm(params["enc_ln"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# decoder (teacher-forced / prefill)
+# ---------------------------------------------------------------------------
+def decode_train(
+    params, enc_out, tokens, cfg: ModelConfig, collect_cache: bool = False
+):
+    """Teacher-forced decoder pass.  Returns (logits, caches|None)."""
+    ct = common.cdtype(cfg)
+    b, s = tokens.shape
+    f = enc_out.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(ct)
+    x = x + jnp.take(params["dec_pos"], positions, axis=0).astype(ct)
+    x = wsc(x, ("batch", "seq_sp", "embed"))
+
+    def body(x, lp):
+        cache = None
+        h = apply_norm(lp["ln1"], x, cfg)
+        if collect_cache:
+            y, (k, v) = attention.attn_forward(
+                lp["self"], h, positions, cfg, causal=True, return_kv=True
+            )
+            cache = {"k": k, "v": v}
+        else:
+            y = attention.attn_forward(
+                lp["self"], h, positions, cfg, causal=True
+            )
+        x = x + y
+        h = apply_norm(lp["ln_x"], x, cfg)
+        if collect_cache:
+            y, (ck, cv) = attention.attn_forward(
+                lp["cross"], h, positions, cfg, causal=False,
+                kv_x=enc_out, kv_positions=enc_positions, return_kv=True,
+            )
+            cache.update({"cross_k": ck, "cross_v": cv})
+        else:
+            y = attention.attn_forward(
+                lp["cross"], h, positions, cfg, causal=False,
+                kv_x=enc_out, kv_positions=enc_positions,
+            )
+        x = x + y
+        h = apply_norm(lp["ln2"], x, cfg)
+        x = x + mlp.mlp_forward(lp["mlp"], h, cfg)
+        x = wsc(x, ("batch", "seq_sp", "embed"))
+        return x, cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(
+        body, x, params["decoder"], unroll=cfg.scan_unroll
+    )
+    x = apply_norm(params["dec_ln"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(ct), params["head"].astype(ct))
+    logits = wsc(logits, ("batch", None, "vocab"))
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+def init_encdec_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    ct = common.cdtype(cfg)
+    nl = cfg.n_layers
+    self_shape = (nl, batch, cfg.n_kv_heads, max_seq, cfg.hd)
+    cross_shape = (nl, batch, cfg.n_kv_heads, N_FRAMES, cfg.hd)
+    self_axes = ("layers", "batch", "kv_heads", "cache_seq", None)
+    cross_axes = ("layers", "batch", "kv_heads", None, None)
+    caches = {
+        "k": jnp.zeros(self_shape, ct),
+        "v": jnp.zeros(self_shape, ct),
+        "cross_k": jnp.zeros(cross_shape, ct),
+        "cross_v": jnp.zeros(cross_shape, ct),
+    }
+    specs = {
+        "k": self_axes, "v": self_axes,
+        "cross_k": cross_axes, "cross_v": cross_axes,
+    }
+    return caches, specs
+
+
+def encdec_decode(params, caches, token, pos, cfg: ModelConfig):
+    """One decode step against self + cross caches."""
+    ct = common.cdtype(cfg)
+    b = token.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = jnp.take(params["tok_embed"], token, axis=0).astype(ct)
+    x = x + jnp.take(params["dec_pos"], positions, axis=0).astype(ct)
+
+    def body(x, xs):
+        lp, cache = xs
+        h = apply_norm(lp["ln1"], x, cfg)
+        y, k_c, v_c = attention.attn_decode(
+            lp["self"], h, cache["k"], cache["v"], pos, cfg
+        )
+        x = x + y
+        h = apply_norm(lp["ln_x"], x, cfg)
+        x = x + attention.cross_attn_cached(
+            lp["cross"], h, cache["cross_k"], cache["cross_v"], cfg
+        )
+        h = apply_norm(lp["ln2"], x, cfg)
+        x = x + mlp.mlp_forward(lp["mlp"], h, cfg)
+        return x, {
+            "k": k_c, "v": v_c,
+            "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+        }
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["decoder"], caches), unroll=cfg.scan_unroll
+    )
+    x = apply_norm(params["dec_ln"], x, cfg)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(ct), params["head"].astype(ct)
+    )[:, 0]
+    logits = wsc(logits, ("batch", "vocab"))
+    return logits, new_caches

@@ -1,0 +1,290 @@
+"""Dense MLPs (SwiGLU / GELU) and Mixture-of-Experts.
+
+MoE strategy (DESIGN.md §6, EXPERIMENTS.md §Perf P1/C1): the whole MoE
+layer is a hand-written fully-manual ``shard_map`` — GSPMD cannot shard
+sort/scatter dispatch (the auto-partitioned form replicates ~720 GB/device
+at qwen3-moe train_4k scale).  Tokens arrive sequence-sharded over
+``model`` (the residual's SP layout) and (pod, data)-sharded over batch;
+top-k / sort / capacity bucketing / combine are shard-local; expert
+parallelism is one explicit ``all_to_all`` over ``model`` with FSDP
+``all_gather`` of expert weights over ``data``; grok-style few-big-expert
+models (``moe_shard="ff"``) tensor-shard the expert hidden dim and
+``psum`` partial outputs instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init, split_tree
+from repro.sharding.specs import logical_constraint as wsc
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = common.pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    pairs = {
+        "w_up": dense_init(ks[0], (d, f), dt, ("fsdp", "mlp")),
+        "w_down": dense_init(ks[1], (f, d), dt, ("mlp", "fsdp")),
+    }
+    if cfg.mlp_gated:
+        pairs["w_gate"] = dense_init(ks[2], (d, f), dt, ("fsdp", "mlp"))
+    return split_tree(pairs)
+
+
+def mlp_forward(params, x, cfg: ModelConfig):
+    ct = common.cdtype(cfg)
+    xc = x.astype(ct)
+    up = xc @ params["w_up"].astype(ct)
+    if cfg.mlp_gated:
+        gate = xc @ params["w_gate"].astype(ct)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = wsc(h, ("batch", "seq", "mlp"))
+    return h @ params["w_down"].astype(ct)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    dt = common.pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    if cfg.moe_shard == "expert":
+        up_axes = ("experts", "fsdp", None)
+        down_axes = ("experts", None, "fsdp")
+    else:  # "ff": few big experts — TP the hidden dim instead (grok-style)
+        up_axes = (None, "fsdp", "mlp")
+        down_axes = (None, "mlp", "fsdp")
+    pairs = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, (None, None)),
+        "w_gate": dense_init(ks[1], (e, d, f), dt, up_axes),
+        "w_up": dense_init(ks[2], (e, d, f), dt, up_axes),
+        "w_down": dense_init(ks[3], (e, f, d), dt, down_axes),
+    }
+    return split_tree(pairs)
+
+
+def _capacity(tokens_per_shard: int, cfg: ModelConfig) -> int:
+    c = int(
+        tokens_per_shard * cfg.top_k * cfg.capacity_factor / cfg.n_experts
+    )
+    return max(((c + 3) // 4) * 4, 4)
+
+
+def _route(params, xl, cfg: ModelConfig):
+    """Router: (T, D) → (probs (T,E) f32, top_p (T,k), top_e (T,k))."""
+    logits = xl.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return probs, top_p, top_e
+
+
+def _bucket(top_e, tl: int, k: int, e: int, cap: int):
+    """Sort-based capacity positions (all shard-local, no collectives)."""
+    flat_e = top_e.reshape(tl * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos_in_e = jnp.arange(tl * k, dtype=jnp.int32) - seg_start[sorted_e]
+    keep = pos_in_e < cap
+    src_tok = order // k
+    return order, sorted_e, src_tok, jnp.where(keep, pos_in_e, 0), keep
+
+
+def _expert_ffn(buf, wg, wu, wd, ct):
+    """(E?, C, D) → (E?, C, D) batched expert matmuls."""
+    hg = jnp.einsum("ecd,edf->ecf", buf, wg.astype(ct))
+    hu = jnp.einsum("ecd,edf->ecf", buf, wu.astype(ct))
+    h = jax.nn.silu(hg) * hu
+    return jnp.einsum("ecf,efd->ecd", h, wd.astype(ct))
+
+
+def _aux_loss(counts, prob_sum, total_tokens, cfg: ModelConfig):
+    """Switch-style load-balance loss from expert counts + mean probs."""
+    density = counts / jnp.maximum(total_tokens * cfg.top_k, 1.0)
+    prob_mean = prob_sum / jnp.maximum(total_tokens, 1.0)
+    return (
+        cfg.router_aux_coef * cfg.n_experts * jnp.sum(density * prob_mean)
+    )
+
+
+def _moe_local(params, xf, cfg: ModelConfig):
+    """Single-shard reference path (also the oracle for the EP tests)."""
+    ct = common.cdtype(cfg)
+    tl, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(tl, cfg)
+    probs, top_p, top_e = _route(params, xf, cfg)
+    order, sorted_e, src, pos, keep = _bucket(top_e, tl, k, e, cap)
+    contrib = jnp.where(keep[:, None], xf[src].astype(ct), 0)
+    buf = jnp.zeros((e, cap, d), ct).at[sorted_e, pos].add(
+        contrib, mode="drop"
+    )
+    out = _expert_ffn(
+        buf, params["w_gate"], params["w_up"], params["w_down"], ct
+    )
+    gathered = out[sorted_e, pos]
+    w = (top_p.reshape(tl * k)[order] * keep).astype(ct)
+    y = jnp.zeros((tl, d), ct).at[src].add(gathered * w[:, None])
+    counts = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    aux = _aux_loss(counts, probs.sum(0), float(tl), cfg)
+    return y, aux
+
+
+def moe_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, D) → (B, S, D) + load-balance aux loss.
+
+    Distribution strategy (hand-written, NOT left to GSPMD): XLA cannot
+    shard the sort/scatter dispatch — the auto-partitioned formulation
+    replicates an (T·k, D) gather on every device (~600 GB/device at
+    qwen3-moe train_4k; §Perf log).  Instead the whole MoE layer runs in a
+    fully-manual ``shard_map``:
+
+      * tokens stay in their (pod, data) shard; top-k, sort, capacity
+        bucketing and the combine are shard-LOCAL (zero collectives),
+      * ``moe_shard="expert"`` (EP): per-expert capacity buffers do one
+        explicit ``all_to_all`` over ``model`` (experts↔capacity), expert
+        FFNs run on E/|model| local experts with FSDP ``all_gather`` of
+        their weights over ``data``,
+      * ``moe_shard="ff"`` (grok-style few-big-experts): experts stay
+        replicated, each model rank computes its F-slice and a ``psum``
+        over ``model`` reduces the partial outputs,
+      * the load-balance loss psums token statistics over (pod, data).
+
+    Without an active mesh (CPU smoke tests, 1-device examples) the
+    shard-local path runs directly.
+    """
+    from repro.sharding import specs as sharding_specs
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    mesh = sharding_specs.active_mesh()
+    rules = sharding_specs.active_rules()
+    if mesh is not None and rules is not None:
+        batch_axes = tuple(
+            a for a in (rules.lookup("batch") or ())
+            if a in mesh.axis_names
+        )
+    else:
+        batch_axes = ()
+    n_tok_shards = 1
+    for a in batch_axes:
+        n_tok_shards *= mesh.shape[a]
+    if not batch_axes or b % n_tok_shards:
+        y, aux = _moe_local(params, x.reshape(b * s, d), cfg)
+        return y.reshape(b, s, d), aux
+
+    e, k = cfg.n_experts, cfg.top_k
+    ct = common.cdtype(cfg)
+    has_model = "model" in mesh.axis_names
+    n_model = mesh.shape["model"] if has_model else 1
+    ep = cfg.moe_shard == "expert" and has_model and e % n_model == 0
+    ff_tp = cfg.moe_shard == "ff" and has_model and cfg.expert_ff % n_model == 0
+    # EP + sequence-parallel dispatch: tokens enter ALREADY seq-sharded
+    # over `model` (the residual's SP layout), so each model rank routes
+    # only its own token slice.  Without this, tokens are replicated over
+    # model and the a2a multiplies expert-FFN rows by n_model — 16×
+    # redundant compute measured at qwen3-moe train_4k (§Perf log).
+    seq_split = ep and s % n_model == 0 and s >= n_model
+    tl = (b // n_tok_shards) * (s // (n_model if seq_split else 1))
+    cap = _capacity(tl, cfg)
+    tok_axes = batch_axes + (("model",) if seq_split else ())
+
+    if ep:
+        w_specs = {
+            "router": P(None, None),
+            "w_gate": P("model", "data", None),
+            "w_up": P("model", "data", None),
+            "w_down": P("model", None, "data"),
+        }
+    elif ff_tp:
+        w_specs = {
+            "router": P(None, None),
+            "w_gate": P(None, "data", "model"),
+            "w_up": P(None, "data", "model"),
+            "w_down": P(None, "model", "data"),
+        }
+    else:
+        w_specs = {
+            "router": P(None, None),
+            "w_gate": P(None, "data", None),
+            "w_up": P(None, "data", None),
+            "w_down": P(None, None, "data"),
+        }
+    if "data" not in mesh.axis_names:
+        w_specs = {k_: P(*[None] * len(v)) for k_, v in w_specs.items()}
+
+    def body(xb, router, wg, wu, wd):
+        p = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        xl = xb.reshape(tl, d)
+        probs, top_p, top_e = _route(p, xl, cfg)
+        order, sorted_e, src, pos, keep = _bucket(top_e, tl, k, e, cap)
+        contrib = jnp.where(keep[:, None], xl[src].astype(ct), 0)
+        buf = jnp.zeros((e, cap, d), ct).at[sorted_e, pos].add(
+            contrib, mode="drop"
+        )
+        if "data" in mesh.axis_names:
+            gather = lambda w, ax: jax.lax.all_gather(
+                w, "data", axis=ax, tiled=True
+            )
+        else:
+            gather = lambda w, ax: w
+        if ep:
+            # experts ↔ capacity all-to-all (the EP boundary)
+            buf = jax.lax.all_to_all(
+                buf, "model", split_axis=0, concat_axis=1, tiled=True
+            )  # (E/n_model, n_model·cap, D)
+            out = _expert_ffn(
+                buf, gather(wg, 1), gather(wu, 1), gather(wd, 2), ct
+            )
+            out = jax.lax.all_to_all(
+                out, "model", split_axis=1, concat_axis=0, tiled=True
+            )  # (E, cap, D)
+        elif ff_tp:
+            # partial-F expert compute + psum over model
+            out = _expert_ffn(
+                buf, gather(wg, 1), gather(wu, 1), gather(wd, 2), ct
+            )
+            out = jax.lax.psum(out, "model")
+        else:
+            out = _expert_ffn(
+                buf, gather(wg, 1), gather(wu, 1), gather(wd, 2), ct
+            )
+        gathered = out[sorted_e, pos]
+        w = (top_p.reshape(tl * k)[order] * keep).astype(ct)
+        y = jnp.zeros((tl, d), ct).at[src].add(gathered * w[:, None])
+        counts = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+        counts = jax.lax.psum(counts, tok_axes)
+        prob_sum = jax.lax.psum(probs.sum(0), tok_axes)
+        aux = _aux_loss(counts, prob_sum, float(b * s), cfg)
+        return y.reshape(xb.shape), aux
+
+    x_spec = P(batch_axes, "model" if seq_split else None, None)
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            x_spec,
+            w_specs["router"], w_specs["w_gate"],
+            w_specs["w_up"], w_specs["w_down"],
+        ),
+        out_specs=(x_spec, P()),
+        axis_names=frozenset(mesh.axis_names),
+        check_vma=False,
+    )(
+        x,
+        params["router"], params["w_gate"],
+        params["w_up"], params["w_down"],
+    )
+    return y, aux

@@ -1,0 +1,118 @@
+"""Single public entry point for every assigned architecture.
+
+``init_model / train_loss / prefill / init_caches / decode_step`` dispatch
+on ``cfg.family`` so the launcher, dry-run driver, trainer, and tests never
+special-case architectures.  Batches are plain dicts:
+
+  train:   tokens (B,S) i32, labels (B,S) i32 [+ patches (B,P,D) for vlm,
+           frames (B,F,D) for audio]
+  prefill: tokens (B,S) [+ patches / frames]
+  decode:  token (B,1) i32, pos () i32  [+ caches]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, encdec, transformer
+
+
+def init_model(key, cfg: ModelConfig):
+    """→ (params, logical-axis specs) for any family."""
+    if cfg.is_encdec:
+        return encdec.init_encdec(key, cfg)
+    return transformer.init_decoder(key, cfg)
+
+
+def _forward(params, batch, cfg: ModelConfig, collect_cache: bool):
+    if cfg.is_encdec:
+        enc_out = encdec.encode(params, batch["frames"], cfg)
+        logits, caches = encdec.decode_train(
+            params, enc_out, batch["tokens"], cfg, collect_cache
+        )
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        logits, aux, caches = transformer.decoder_forward(
+            params,
+            batch["tokens"],
+            cfg,
+            patches=batch.get("patches"),
+            collect_cache=collect_cache,
+        )
+    return logits, aux, caches
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    """→ (scalar loss, metrics dict).  fp32 loss, z-loss regularized."""
+    logits, aux, _ = _forward(params, batch, cfg, collect_cache=False)
+    labels = batch["labels"]
+    weights = batch.get("loss_weights")
+    if weights is None and cfg.n_image_patches:
+        # VLM: no next-token loss on image-patch positions
+        s = labels.shape[1]
+        weights = jnp.broadcast_to(
+            (jnp.arange(s) >= cfg.n_image_patches).astype(jnp.float32),
+            labels.shape,
+        )
+    loss, nll = common.softmax_cross_entropy(logits, labels, weights)
+    total = loss + aux
+    return total, {"loss": total, "nll": nll, "aux": aux}
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Prefill pass: returns (last-position logits (B,V), caches)."""
+    logits, _, caches = _forward(params, batch, cfg, collect_cache=True)
+    return logits[:, -1], caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.is_encdec:
+        return encdec.init_encdec_caches(cfg, batch, max_seq)
+    return transformer.init_decode_caches(cfg, batch, max_seq)
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig):
+    """One-token decode: → (logits (B,V), updated caches)."""
+    if cfg.is_encdec:
+        return encdec.encdec_decode(params, caches, token, pos, cfg)
+    return transformer.decoder_decode(params, caches, token, pos, cfg)
+
+
+def param_count(params) -> int:
+    import jax
+
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS/token = 6·N (dense) or 6·N_active (MoE) — §Roofline."""
+    d = cfg.d_model
+    n_active = 2 * cfg.vocab * d  # embed + head
+    program = transformer.layer_program(cfg) if not cfg.is_encdec else None
+    if cfg.is_encdec:
+        per_attn = 4 * d * cfg.n_heads * cfg.hd
+        per_mlp = (3 if cfg.mlp_gated else 2) * d * cfg.d_ff
+        n_active += cfg.n_layers * (2 * per_attn + per_mlp)
+        n_active += cfg.encoder_layers * (per_attn + per_mlp)
+        return 6.0 * n_active
+    ng = transformer.n_groups(cfg)
+    for spec in program:
+        if spec.mixer == "attn":
+            n_active += ng * 2 * d * (cfg.n_heads + cfg.n_kv_heads) * cfg.hd
+            n_active += ng * cfg.n_heads * cfg.hd * d  # wo
+        else:
+            din = cfg.d_inner
+            conv_ch = din + 2 * cfg.ssm_groups * cfg.ssm_state
+            n_active += ng * (
+                d * (2 * din + 2 * cfg.ssm_groups * cfg.ssm_state
+                     + cfg.ssm_heads)
+                + cfg.ssm_conv * conv_ch
+                + din * d
+            )
+        if spec.mlp == "dense":
+            n_active += ng * (3 if cfg.mlp_gated else 2) * d * cfg.d_ff
+        elif spec.mlp == "moe":
+            n_active += ng * cfg.top_k * 3 * d * cfg.expert_ff
+            n_active += ng * d * cfg.n_experts  # router
+    return 6.0 * n_active

@@ -1,0 +1,252 @@
+"""Mamba2 blocks via SSD — state-space duality (arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk terms are
+attention-like batched einsums (MXU-friendly — this is the whole point of
+SSD on TPU), inter-chunk state is a short ``lax.scan`` recurrence over
+chunk summaries.  Decode is the O(1) recurrent update.
+
+Shapes: x (B,S,D) → in_proj → [z | xBC | dt]; causal depthwise conv over
+xBC; SSD over heads (H = d_inner / head_dim) with G B/C groups of state N.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init, split_tree
+from repro.sharding.specs import logical_constraint as wsc
+
+SSD_CHUNK = 256
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    g, n, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    conv_ch = d_in + 2 * g * n
+    proj_out = 2 * d_in + 2 * g * n + h  # z, xBC, dt
+    return d_in, g, n, p, h, conv_ch, proj_out
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, g, n, p, h, conv_ch, proj_out = _dims(cfg)
+    dt = common.pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (h,), jnp.float32)
+    dt_init = jnp.log(jnp.expm1(jnp.exp(u * 4.6 - 6.9)))
+    pairs = {
+        "in_proj": dense_init(ks[0], (d, proj_out), dt, ("fsdp", "mlp")),
+        "out_proj": dense_init(ks[1], (d_in, d), dt, ("mlp", "fsdp")),
+        "conv_w": (
+            0.1
+            * jax.random.normal(ks[3], (cfg.ssm_conv, conv_ch), jnp.float32).astype(dt),
+            (None, "mlp"),
+        ),
+        "conv_b": (jnp.zeros((conv_ch,), dt), ("mlp",)),
+        "A_log": (jnp.zeros((h,), jnp.float32), ("ssm_heads",)),
+        "D": (jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "dt_bias": (dt_init.astype(jnp.float32), ("ssm_heads",)),
+        "norm": (jnp.ones((d_in,), dt), ("mlp",)),
+    }
+    return split_tree(pairs)
+
+
+def _segsum(a):
+    """a: (..., Q) → (..., Q, Q) cumulative sums over segments i≥j."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x, dt, a_log, b_mat, c_mat, init_state=None, chunk=SSD_CHUNK,
+    unroll: bool = False,
+):
+    """SSD over chunks.
+
+    x: (B,S,H,P) — pre-multiplied inputs (x·dt applied here)
+    dt: (B,S,H) — softplus'd step sizes
+    a_log: (H,) — A = -exp(a_log)
+    b_mat/c_mat: (B,S,G,N); heads are grouped G → H by repetition.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+    a = -jnp.exp(a_log)  # (H,)
+    da = dt * a  # (B,S,H)
+    xd = x * dt[..., None]
+
+    def resh(t_, tail):
+        return t_.reshape((bsz, nc, chunk) + tail)
+
+    xc = resh(xd, (h, p))
+    dac = resh(da, (h,))
+    bc = resh(b_mat, (g, n))
+    cc = resh(c_mat, (g, n))
+    # broadcast groups → heads
+    bh = jnp.repeat(bc, rep, axis=3)  # (B,nc,Q,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    a_cs = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H)
+    # intra-chunk (attention-like) term
+    l_mat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", ch, bh) * l_mat
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xc)
+
+    # chunk summary states
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", bh, decay_states, xc)
+
+    # inter-chunk recurrence over chunk summaries
+    a_tot = jnp.exp(a_cs[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(prev, inp):
+        st, atot = inp  # (B,H,P,N), (B,H)
+        new = prev * atot[..., None, None] + st
+        return new, prev  # emit the state *entering* the chunk
+
+    init = (
+        jnp.zeros((bsz, h, p, n), x.dtype)
+        if init_state is None
+        else init_state
+    )
+    final, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.swapaxes(0, 1), a_tot.swapaxes(0, 1)),
+        unroll=unroll,
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (B,nc,H,P,N)
+
+    # inter-chunk output term
+    state_decay = jnp.exp(a_cs)  # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcihn,bchpn,bcih->bcihp", ch, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def _conv1d_causal(xbc, w, bias):
+    """Depthwise causal conv.  xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum of shifted slices — avoids conv dilation plumbing, K is tiny (4)
+    s = xbc.shape[1]
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i : i + s, :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return (out + bias.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_in, g, n, p, h, conv_ch, _ = _dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + conv_ch]
+    dt = proj[..., d_in + conv_ch :]
+    return z, xbc, dt
+
+
+def mamba_forward(params, x, cfg: ModelConfig, init_state=None):
+    """Train/prefill.  x: (B,S,D) → (B,S,D).
+
+    Returns (y, final_state, conv_tail) where conv_tail is the last K-1
+    pre-conv activations (B, K-1, C) — the decode conv cache.
+    """
+    ct = common.cdtype(cfg)
+    d_in, g, n, p, h, conv_ch, _ = _dims(cfg)
+    bsz, s, _ = x.shape
+    proj = x.astype(ct) @ params["in_proj"].astype(ct)
+    z, xbc, dt = _split_proj(proj, cfg)
+    k = cfg.ssm_conv
+    if s >= k - 1:
+        conv_tail = xbc[:, s - (k - 1) :, :]
+    else:
+        conv_tail = jnp.pad(xbc, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    xbc = _conv1d_causal(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(bsz, s, h, p)
+    b_mat = xbc[..., d_in : d_in + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., d_in + g * n :].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xs = wsc(xs, ("batch", "seq", "ssm_heads", None))
+    y, final = ssd_chunked(
+        xs.astype(jnp.float32),
+        dt,
+        params["A_log"],
+        b_mat.astype(jnp.float32),
+        c_mat.astype(jnp.float32),
+        init_state=init_state,
+        chunk=cfg.ssd_chunk,
+        unroll=cfg.scan_unroll,
+    )
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(ct)
+    y = common.rmsnorm(y * jax.nn.silu(z.astype(ct)), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(ct), final, conv_tail
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, n_layers: int):
+    d_in, g, n, p, h, conv_ch, _ = _dims(cfg)
+    cache = {
+        "state": jnp.zeros((n_layers, batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros(
+            (n_layers, batch, cfg.ssm_conv - 1, conv_ch),
+            common.cdtype(cfg),
+        ),
+    }
+    specs = {
+        "state": ("layers", "batch", "ssm_heads", None, None),
+        "conv": ("layers", "batch", None, "mlp"),
+    }
+    return cache, specs
+
+
+def mamba_decode(params, x, state, conv_state, cfg: ModelConfig):
+    """One-token recurrent update.  x: (B,1,D); state: (B,H,P,N);
+    conv_state: (B,K-1,C).  Returns (y, state, conv_state)."""
+    ct = common.cdtype(cfg)
+    d_in, g, n, p, h, conv_ch, _ = _dims(cfg)
+    bsz = x.shape[0]
+    proj = x.astype(ct) @ params["in_proj"].astype(ct)  # (B,1,proj)
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc = xbc[:, 0]  # (B,C)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_state = window[:, 1:]
+    w = params["conv_w"].astype(jnp.float32)  # (K,C)
+    conv_out = (window.astype(jnp.float32) * w[None]).sum(axis=1) + params[
+        "conv_b"
+    ].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)  # (B,C) fp32
+    xs = xbc[:, :d_in].reshape(bsz, h, p)
+    b_t = xbc[:, d_in : d_in + g * n].reshape(bsz, g, n)
+    c_t = xbc[:, d_in + g * n :].reshape(bsz, g, n)
+    rep = h // g
+    b_h = jnp.repeat(b_t, rep, axis=1)  # (B,H,N)
+    c_h = jnp.repeat(c_t, rep, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])  # (H,)
+    da = jnp.exp(dtv * a)  # (B,H)
+    xdt = xs * dtv[..., None]  # (B,H,P)
+    state = state * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, b_h
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_h) + params["D"][None, :, None] * xs
+    y = y.reshape(bsz, 1, d_in).astype(ct)
+    y = common.rmsnorm(
+        y * jax.nn.silu(z.astype(ct)), params["norm"], cfg.norm_eps
+    )
+    return y @ params["out_proj"].astype(ct), state, conv_state

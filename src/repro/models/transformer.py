@@ -1,0 +1,364 @@
+"""Unified decoder stack for all assigned decoder-only architectures:
+dense GQA (qwen/starcoder), VLM (llava — patch-embedding stub frontend),
+MoE (qwen3-moe/grok), SSM (mamba2), and hybrid (jamba).
+
+Layer heterogeneity (jamba's 1-attention-per-8 interleave, MoE on alternate
+layers) is expressed as a *layer program*: the smallest repeating period of
+slot specs.  Parameters are stacked per slot with a leading ``n_groups``
+axis and the whole stack runs as ONE ``lax.scan`` over groups — the lowered
+HLO is O(period), not O(n_layers), which keeps 94-layer compiles cheap and
+is what makes the 512-device dry-run tractable on this container.
+
+Memory policy: the residual stream between layers is sequence-parallel
+(logical axis ``seq_sp`` → ``model``); with ``cfg.remat`` the scan body is
+wrapped in ``jax.checkpoint`` so live activations are one layer deep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mlp, ssm
+from repro.models.common import dense_init, split_tree
+from repro.sharding.specs import logical_constraint as wsc
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    mixer: str  # "attn" | "mamba"
+    mlp: str  # "dense" | "moe" | "none"
+
+
+def layer_program(cfg: ModelConfig) -> tuple[SlotSpec, ...]:
+    """The smallest repeating period of layer kinds."""
+    period = 1
+    if cfg.attn_every:
+        period = cfg.attn_every
+    if cfg.n_experts:
+        period = period * cfg.moe_every // math.gcd(period, cfg.moe_every)
+    slots = []
+    for i in range(period):
+        mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+        if cfg.family == "ssm":
+            m = "none"  # mamba2 blocks are mixer-only
+        elif cfg.is_moe_layer(i):
+            m = "moe"
+        else:
+            m = "dense"
+        slots.append(SlotSpec(mixer, m))
+    return tuple(slots)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    period = len(layer_program(cfg))
+    if cfg.n_layers % period:
+        raise ValueError(
+            f"{cfg.name}: n_layers={cfg.n_layers} not divisible by "
+            f"layer-program period {period}"
+        )
+    return cfg.n_layers // period
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig):
+    dt = common.pdtype(cfg)
+    if cfg.norm_type == "layernorm":
+        p = {"scale": jnp.ones((cfg.d_model,), dt),
+             "bias": jnp.zeros((cfg.d_model,), dt)}
+        s = {"scale": ("embed",), "bias": ("embed",)}
+    else:
+        p = {"scale": jnp.ones((cfg.d_model,), dt)}
+        s = {"scale": ("embed",)}
+    return p, s
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    if cfg.norm_type == "layernorm":
+        return common.layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return common.rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# slot init / forward
+# ---------------------------------------------------------------------------
+def init_slot(key, spec: SlotSpec, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = init_norm(cfg)
+    if spec.mixer == "attn":
+        p["mix"], s["mix"] = attention.init_attention(ks[0], cfg)
+    else:
+        p["mix"], s["mix"] = ssm.init_mamba(ks[0], cfg)
+    if spec.mlp != "none":
+        p["ln2"], s["ln2"] = init_norm(cfg)
+        if spec.mlp == "moe":
+            p["mlp"], s["mlp"] = mlp.init_moe(ks[1], cfg)
+        else:
+            p["mlp"], s["mlp"] = mlp.init_mlp(ks[1], cfg)
+    return p, s
+
+
+def init_layer_stack(key, cfg: ModelConfig):
+    """All layers, stacked (n_groups leading axis per leaf) for lax.scan."""
+    program = layer_program(cfg)
+    ng = n_groups(cfg)
+    params, specs = {}, {}
+    for j, spec in enumerate(program):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, ng)
+        spec_box = {}
+
+        def shapes_only(k, _spec=spec, _box=spec_box):
+            p, s = init_slot(k, _spec, cfg)
+            _box["s"] = s
+            return p
+
+        jax.eval_shape(shapes_only, keys[0])  # captures specs, no compute
+        params[f"slot{j}"] = jax.vmap(
+            lambda k, _spec=spec: init_slot(k, _spec, cfg)[0]
+        )(keys)
+        specs[f"slot{j}"] = jax.tree.map(
+            lambda axes: ("layers",) + axes,
+            spec_box["s"],
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    return params, specs
+
+
+def apply_slot(
+    p,
+    spec: SlotSpec,
+    x,
+    positions,
+    cfg: ModelConfig,
+    collect_cache: bool = False,
+):
+    """One residual block.  Returns (x, aux_loss, cache_or_None)."""
+    h = apply_norm(p["ln1"], x, cfg)
+    cache = None
+    if spec.mixer == "attn":
+        if collect_cache:
+            y, (k, v) = attention.attn_forward(
+                p["mix"], h, positions, cfg, causal=True, return_kv=True
+            )
+            cache = {"k": k, "v": v}
+        else:
+            y = attention.attn_forward(
+                p["mix"], h, positions, cfg, causal=True
+            )
+    else:
+        y, final_state, conv_tail = ssm.mamba_forward(p["mix"], h, cfg)
+        if collect_cache:
+            cache = {"state": final_state, "conv": conv_tail}
+    x = x + y
+    x = wsc(x, ("batch", "seq_sp", "embed"))
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp != "none":
+        h = apply_norm(p["ln2"], x, cfg)
+        if spec.mlp == "moe":
+            y, aux = mlp.moe_forward(p["mlp"], h, cfg)
+        else:
+            y = mlp.mlp_forward(p["mlp"], h, cfg)
+        x = x + y
+        x = wsc(x, ("batch", "seq_sp", "embed"))
+    return x, aux, cache
+
+
+def stack_forward(
+    layers, x, positions, cfg: ModelConfig, collect_cache: bool = False
+):
+    """lax.scan over layer groups.  Returns (x, aux_sum, caches|None).
+
+    ``caches`` (when collected) is {slotJ: pytree with leading n_groups}.
+    """
+    program = layer_program(cfg)
+
+    def body(carry, lp):
+        x, aux = carry
+        caches = {}
+        for j, spec in enumerate(program):
+            x, a, cache = apply_slot(
+                lp[f"slot{j}"], spec, x, positions, cfg, collect_cache
+            )
+            aux = aux + a
+            if collect_cache:
+                caches[f"slot{j}"] = cache
+        return (x, aux), (caches if collect_cache else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), layers,
+        unroll=cfg.scan_unroll,
+    )
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# full decoder model
+# ---------------------------------------------------------------------------
+def init_decoder(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    dt = common.pdtype(cfg)
+    pairs = {
+        "tok_embed": dense_init(
+            ks[0], (cfg.vocab, cfg.d_model), dt, ("vocab", "embed"), scale=1.0
+        ),
+        "head": dense_init(
+            ks[1], (cfg.d_model, cfg.vocab), dt, ("embed", "vocab")
+        ),
+    }
+    if cfg.pos_embed == "learned":
+        maxp = cfg.max_positions or 4096
+        pairs["pos_embed"] = dense_init(
+            ks[2], (maxp, cfg.d_model), dt, (None, "embed"), scale=0.02
+        )
+    if cfg.n_image_patches:
+        # VLM adapter: the anyres frontend is a stub (input_specs supplies
+        # projected patch embeddings); mm_proj is the trainable projector.
+        pairs["mm_proj"] = dense_init(
+            ks[3], (cfg.d_model, cfg.d_model), dt, ("fsdp", None)
+        )
+    params, specs = split_tree(pairs)
+    params["final_ln"], specs["final_ln"] = init_norm(cfg)
+    params["layers"], specs["layers"] = init_layer_stack(ks[4], cfg)
+    return params, specs
+
+
+def embed_tokens(params, tokens, positions, cfg: ModelConfig):
+    ct = common.cdtype(cfg)
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(ct)
+    if cfg.pos_embed == "learned":
+        x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(ct)
+    return x
+
+
+def merge_patches(params, x, patches, cfg: ModelConfig):
+    """VLM: image patch embeddings occupy the first n_patches positions."""
+    ct = common.cdtype(cfg)
+    proj = patches.astype(ct) @ params["mm_proj"].astype(ct)
+    npat = cfg.n_image_patches
+    s = x.shape[1]
+    if npat >= s:
+        raise ValueError("sequence shorter than patch count")
+    pad = jnp.pad(proj, ((0, 0), (0, s - npat), (0, 0)))
+    is_img = (jnp.arange(s) < npat)[None, :, None]
+    return jnp.where(is_img, pad, x)
+
+
+def decoder_forward(
+    params,
+    tokens,
+    cfg: ModelConfig,
+    patches=None,
+    collect_cache: bool = False,
+):
+    """tokens (B,S) → (logits (B,S,V), aux_loss, caches|None)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(params, tokens, positions, cfg)
+    if cfg.n_image_patches and patches is not None:
+        x = merge_patches(params, x, patches, cfg)
+    x = wsc(x, ("batch", "seq_sp", "embed"))
+    x, aux, caches = stack_forward(
+        params["layers"], x, positions, cfg, collect_cache
+    )
+    x = apply_norm(params["final_ln"], x, cfg)
+    ct = common.cdtype(cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(ct), params["head"].astype(ct))
+    logits = wsc(logits, ("batch", None, "vocab"))
+    return logits, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against caches)
+# ---------------------------------------------------------------------------
+def init_decode_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    """Stacked per-slot caches + logical specs (leading n_groups axis)."""
+    program = layer_program(cfg)
+    ng = n_groups(cfg)
+    ct = common.cdtype(cfg)
+    d_in, g, n, p_, h, conv_ch, _ = (
+        ssm._dims(cfg) if any(s.mixer == "mamba" for s in program) else
+        (0,) * 7
+    )
+    caches, specs = {}, {}
+    for j, spec in enumerate(program):
+        if spec.mixer == "attn":
+            shape = (ng, batch, cfg.n_kv_heads, max_seq, cfg.hd)
+            axes = ("layers", "batch", "kv_heads", "cache_seq", None)
+            caches[f"slot{j}"] = {
+                "k": jnp.zeros(shape, ct),
+                "v": jnp.zeros(shape, ct),
+            }
+            specs[f"slot{j}"] = {"k": axes, "v": axes}
+        else:
+            caches[f"slot{j}"] = {
+                "state": jnp.zeros((ng, batch, h, p_, n), jnp.float32),
+                "conv": jnp.zeros(
+                    (ng, batch, cfg.ssm_conv - 1, conv_ch), ct
+                ),
+            }
+            specs[f"slot{j}"] = {
+                "state": ("layers", "batch", "ssm_heads", None, None),
+                "conv": ("layers", "batch", None, "mlp"),
+            }
+    return caches, specs
+
+
+def decoder_decode(params, caches, token, pos, cfg: ModelConfig):
+    """One decode step.  token (B,1) int32, pos scalar int32 (current index).
+
+    Returns (logits (B,V), new_caches).
+    """
+    program = layer_program(cfg)
+    b = token.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = embed_tokens(params, token, positions, cfg)
+
+    def body(x, xs):
+        lp, cache = xs
+        new_cache = {}
+        for j, spec in enumerate(program):
+            p = lp[f"slot{j}"]
+            h = apply_norm(p["ln1"], x, cfg)
+            if spec.mixer == "attn":
+                y, k_c, v_c = attention.attn_decode(
+                    p["mix"], h, cache[f"slot{j}"]["k"],
+                    cache[f"slot{j}"]["v"], pos, cfg,
+                )
+                new_cache[f"slot{j}"] = {"k": k_c, "v": v_c}
+            else:
+                y, st, cv = ssm.mamba_decode(
+                    p["mix"], h, cache[f"slot{j}"]["state"],
+                    cache[f"slot{j}"]["conv"], cfg,
+                )
+                new_cache[f"slot{j}"] = {"state": st, "conv": cv}
+            x = x + y
+            if spec.mlp != "none":
+                h = apply_norm(p["ln2"], x, cfg)
+                if spec.mlp == "moe":
+                    y, _ = mlp.moe_forward(p["mlp"], h, cfg)
+                else:
+                    y = mlp.mlp_forward(p["mlp"], h, cfg)
+                x = x + y
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["layers"], caches), unroll=cfg.scan_unroll
+    )
+    x = apply_norm(params["final_ln"], x, cfg)
+    ct = common.cdtype(cfg)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(ct), params["head"].astype(ct)
+    )[:, 0]
+    logits = wsc(logits, ("batch", "vocab"))
+    return logits, new_caches

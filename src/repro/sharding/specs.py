@@ -1,0 +1,224 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Models annotate every weight and key activation with *logical* axis names;
+``Rules`` maps logical names to mesh axes; resolution drops mesh axes that
+don't exist (so the same model code runs on the single-pod (data, model)
+mesh, the multi-pod (pod, data, model) mesh, and the 1-device CPU smoke
+mesh).  ``logical_constraint`` applies ``with_sharding_constraint`` only
+when a mesh context is active, so model code stays mesh-agnostic.
+
+Default placement (DESIGN.md §6):
+  * weights: FSDP along ``fsdp``→data, tensor-parallel along heads/mlp/
+    vocab/experts→model; ``pod`` is pure data parallel.
+  * activations: batch over (pod, data); residual-stream seq over model
+    (Megatron-style sequence parallelism) — attention/MLP interiors are
+    head-/ff-sharded instead.
+  * KV caches: batch over data, kv-heads over model; the 512k decode cells
+    override to sequence-sharded caches.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": ("model",),  # sequence-parallel residual stream
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "fsdp": ("data",),
+    "experts": ("model",),
+    "expert_cap": ("data",),
+    "ssm_heads": ("model",),
+    "state": None,
+    "cache_seq": None,
+    "frames": None,
+    "layers": None,
+    "conv": None,
+    "patches": None,
+    None: None,
+}
+
+# per-shape overrides (keyed by input-shape name) — see launch/shapes.py
+LONG_CONTEXT_OVERRIDES = {
+    "batch": None,  # batch=1: don't shard
+    # shard the 512k KV/conv cache over sequence, as many ways as divide
+    "cache_seq": ("pod", "data", "model"),
+    "seq_sp": ("model",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: tuple[tuple[str | None, tuple[str, ...] | None], ...]
+
+    @staticmethod
+    def make(overrides: dict | None = None) -> "Rules":
+        t = dict(DEFAULT_RULES)
+        if overrides:
+            t.update(overrides)
+        return Rules(table=tuple(t.items()))
+
+    def lookup(self, name: str | None) -> tuple[str, ...] | None:
+        for k, v in self.table:
+            if k == name:
+                return v
+        raise KeyError(f"unknown logical axis {name!r}")
+
+    def without_axis(self, axis: str) -> "Rules":
+        """Strip a mesh axis from every rule (for manual shard_map regions,
+        where constraints must not mention the manual axis)."""
+        table = []
+        for k, v in self.table:
+            if v is not None:
+                v = tuple(a for a in v if a != axis) or None
+            table.append((k, v))
+        return Rules(table=tuple(table))
+
+    def spec(self, logical_axes: tuple, mesh: Mesh) -> P:
+        """Resolve logical axes to a PartitionSpec on ``mesh``."""
+        parts = []
+        used: set[str] = set()
+        for name in logical_axes:
+            axes = self.lookup(name)
+            if axes is None:
+                parts.append(None)
+                continue
+            present = tuple(
+                a for a in axes if a in mesh.axis_names and a not in used
+            )
+            used.update(present)
+            if not present:
+                parts.append(None)
+            elif len(present) == 1:
+                parts.append(present[0])
+            else:
+                parts.append(present)
+        return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Mesh context — models call logical_constraint without threading a mesh
+# ---------------------------------------------------------------------------
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Rules):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def active_rules() -> Optional[Rules]:
+    return _CTX.rules
+
+
+def logical_constraint(x, logical_axes: tuple):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = _CTX.rules.spec(logical_axes, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec)
+    )
+
+
+def named_sharding(logical_axes: tuple, mesh=None, rules=None):
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    assert mesh is not None and rules is not None, "no active mesh context"
+    return NamedSharding(mesh, rules.spec(logical_axes, mesh))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules):
+    """Map a pytree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.spec(axes, mesh)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+
+
+def fitted_spec(shape: tuple, logical_axes: tuple, mesh: Mesh,
+                rules: Rules) -> P:
+    """Resolve logical axes, pruning mesh axes that don't divide the dim.
+
+    jit input shardings must divide exactly (unlike intermediate
+    constraints, which GSPMD pads).  Per dim we keep the longest prefix of
+    the rule's mesh axes whose size product divides the dimension — e.g. a
+    2-head KV projection on a 16-way ``model`` axis falls back to
+    replication, and a 512k cache_seq rule ("pod","data","model") uses as
+    many axes as divide.
+    """
+    if len(shape) != len(logical_axes):
+        raise ValueError(
+            f"rank mismatch: shape {shape} vs axes {logical_axes}"
+        )
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical_axes):
+        axes = rules.lookup(name)
+        kept: list[str] = []
+        if axes:
+            size = 1
+            for a in axes:
+                if a not in mesh.axis_names or a in used:
+                    continue
+                nxt = size * mesh.shape[a]
+                if dim % nxt == 0:
+                    kept.append(a)
+                    size = nxt
+                else:
+                    break
+        used.update(kept)
+        if not kept:
+            parts.append(None)
+        elif len(kept) == 1:
+            parts.append(kept[0])
+        else:
+            parts.append(tuple(kept))
+    return P(*parts)
+
+
+def fitted_shardings(shape_tree, spec_tree, mesh: Mesh, rules: Rules):
+    """NamedShardings for jit inputs: shape-aware, divisibility-safe."""
+    return jax.tree.map(
+        lambda sds, axes: NamedSharding(
+            mesh, fitted_spec(tuple(sds.shape), axes, mesh, rules)
+        ),
+        shape_tree,
+        spec_tree,
+        is_leaf=lambda x: _is_axes(x) or hasattr(x, "shape"),
+    )

@@ -1,0 +1,93 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At 1000+ node scale the pod axis crosses DCN (slow inter-pod links); the
+gradient sync over it dominates the collective term.  We compress it:
+
+  * gradients are reduced *within* a pod by XLA SPMD as usual (the ``data``
+    and ``model`` axes stay automatic),
+  * the ``pod`` axis is made *manual* with ``shard_map(..., axes=...)``:
+    each pod quantizes (grad + error-feedback residual) to int8 with one
+    fp32 absmax scale per row, ``all_gather``s the int8 payload across pods
+    (4× fewer wire bytes than fp32), dequantizes and averages locally, and
+    keeps the quantization error as next step's residual.
+
+Error feedback makes the compression unbiased over time (momentum-style
+residual correction); the numerics test in tests/test_train.py checks a
+compressed run tracks the uncompressed loss curve.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _quant(x):
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _sync_leaf(g, err, n_pods):
+    """Per-pod body: returns (synced grad, new error residual)."""
+    g32 = g.astype(jnp.float32)
+    if g.ndim == 0:  # scalars: plain psum, no quantization
+        out = jax.lax.pmean(g32, "pod")
+        return out.astype(g.dtype), err
+    total = g32 + err
+    q, scale = _quant(total)
+    deq = q.astype(jnp.float32) * scale
+    new_err = total - deq
+    qs = jax.lax.all_gather(q, "pod")  # int8 on the wire
+    ss = jax.lax.all_gather(scale, "pod")
+    summed = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    return (summed / n_pods).astype(g.dtype), new_err
+
+
+def make_pod_sync(mesh):
+    """→ sync(grads, err) -> (grads, err), manual over 'pod', auto elsewhere.
+
+    Pass pod-LOCAL gradients (see steps.py: the whole grad computation runs
+    under the same manual-pod region so XLA never inserts its own pod
+    all-reduce first).
+    """
+    n_pods = mesh.shape["pod"]
+    auto = frozenset(a for a in mesh.axis_names if a != "pod")
+
+    def sync(grads, err):
+        pairs = jax.tree.map(
+            lambda g, e: _sync_leaf(g, e, n_pods), grads, err
+        )
+        new_g = jax.tree.map(
+            lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_e = jax.tree.map(
+            lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return new_g, new_e
+
+    return sync, auto, n_pods
+
+
+def init_error_state(params):
+    """Error-feedback residuals (fp32, param-shaped; scalars excluded)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32) if p.ndim else
+        jnp.zeros((), jnp.float32),
+        params,
+    )
+
+
+def compressed_wire_bytes(params) -> int:
+    """Wire bytes per pod-sync with int8 payloads (for §Roofline)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        if p.ndim == 0:
+            total += 4
+        else:
+            rows = int(p.size // p.shape[-1])
+            total += int(p.size) + 4 * rows  # int8 + fp32 row scales
+    return total

@@ -1,0 +1,135 @@
+"""AdamW in pure JAX, with optional int8 block-quantized moments.
+
+No optax offline — this is the framework's optimizer.  Two state formats:
+
+* fp32 moments (default): ``{"m": f32, "v": f32}`` per param.
+* int8 moments (``eight_bit``): each moment is stored as
+  ``{"q": int8 (param shape), "scale": f32 (param.shape[:-1] + (1,))}`` —
+  per-row (last-axis block) absmax scaling.  For ≥200B-param models this
+  cuts optimizer memory 4× (DESIGN.md §6); scalars/vectors stay fp32.
+
+Weight decay is decoupled (AdamW) and skipped for rank-≤1 params (norm
+scales, biases).  Sharding: quantized ``q`` inherits the param's logical
+axes; ``scale`` gets axes[:-1] + (None,).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    eight_bit: bool = False
+
+
+# ---------------------------------------------------------------------------
+# int8 moment quantization
+# ---------------------------------------------------------------------------
+def _quantizable(p) -> bool:
+    return p.ndim >= 2
+
+
+def quantize(x: jnp.ndarray):
+    """Per-row (last-axis) absmax int8 quantization."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize(qs) -> jnp.ndarray:
+    return qs["q"].astype(jnp.float32) * qs["scale"]
+
+
+def _moment_init(p, eight_bit: bool):
+    z = jnp.zeros(p.shape, jnp.float32)
+    if eight_bit and _quantizable(p):
+        return quantize(z)
+    return z
+
+def _moment_get(s) -> jnp.ndarray:
+    return dequantize(s) if isinstance(s, dict) else s
+
+
+def _moment_set(old, new: jnp.ndarray):
+    return quantize(new) if isinstance(old, dict) else new
+
+
+def _is_moment(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    mk = lambda p: _moment_init(p, cfg.eight_bit)
+    return {
+        "m": jax.tree.map(mk, params),
+        "v": jax.tree.map(mk, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs, cfg: AdamWConfig):
+    """Logical-axis specs mirroring ``adamw_init``'s state tree."""
+
+    def one(axes):
+        if cfg.eight_bit and len(axes) >= 2:
+            return {"q": axes, "scale": axes[:-1] + (None,)}
+        return axes
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    mspec = jax.tree.map(one, param_specs, is_leaf=is_axes)
+    return {"m": mspec, "v": mspec, "count": ()}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def adamw_update(params, grads, state, lr, cfg: AdamWConfig):
+    """One AdamW step.  ``lr`` may be a traced scalar (from the schedule)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.max_grad_norm / (gnorm + 1e-12))
+
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * clip
+        m = _moment_get(m_s)
+        v = _moment_get(v_s)
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled decay, matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, _moment_set(m_s, m), _moment_set(v_s, v)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure jnp — trace-safe inside the train step)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    final_frac: float = 0.1  # cosine floor as a fraction of peak
+
+
+def warmup_cosine(step, cfg: ScheduleConfig):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (s - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.final_frac + (1 - cfg.final_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return cfg.peak_lr * jnp.where(s < cfg.warmup_steps, warm, cos)

@@ -1,0 +1,221 @@
+"""Train / serve step functions + the sharding plumbing around them.
+
+``train_step`` is a pure function of (state, batch); the launcher jits it
+with NamedShardings resolved from the logical-axis spec trees.  Variants:
+
+* microbatch gradient accumulation (``cfg.microbatches``) via lax.scan,
+* int8 error-feedback cross-pod gradient sync (``compress=True``): the
+  whole step body runs in a shard_map region where ``pod`` is manual and
+  ``data``/``model`` stay automatic (see compress.py).
+
+State layout: ``{"params": ..., "opt": adamw state, "step": i32[,"err"]}``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.train import compress as compress_lib
+from repro.train import optimizer as opt_lib
+from repro.train.optimizer import AdamWConfig
+from repro.train.schedule import ScheduleConfig, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+def init_train_state(key, cfg: ModelConfig, ocfg: AdamWConfig,
+                     compress: bool = False):
+    params, _ = model.init_model(key, cfg)
+    state = {
+        "params": params,
+        "opt": opt_lib.adamw_init(params, ocfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if compress:
+        state["err"] = compress_lib.init_error_state(params)
+    return state
+
+
+def abstract_state(cfg: ModelConfig, ocfg: AdamWConfig,
+                   compress: bool = False):
+    """(ShapeDtypeStruct state tree, logical-axis spec tree) — no compute."""
+    box = {}
+
+    def go(key):
+        params, specs = model.init_model(key, cfg)
+        box["specs"] = specs
+        return params
+
+    p_shapes = jax.eval_shape(go, jax.random.PRNGKey(0))
+    p_specs = box["specs"]
+    o_shapes = jax.eval_shape(lambda p: opt_lib.adamw_init(p, ocfg), p_shapes)
+    state_shapes = {
+        "params": p_shapes,
+        "opt": o_shapes,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_specs = {
+        "params": p_specs,
+        "opt": opt_lib.opt_state_specs(p_specs, ocfg),
+        "step": (),
+    }
+    if compress:
+        state_shapes["err"] = jax.eval_shape(
+            compress_lib.init_error_state, p_shapes
+        )
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+        state_specs["err"] = jax.tree.map(
+            lambda a: a, p_specs, is_leaf=is_axes
+        )
+    return state_shapes, state_specs
+
+
+# ---------------------------------------------------------------------------
+# gradients (with optional microbatch accumulation)
+# ---------------------------------------------------------------------------
+def _grads_and_metrics(params, batch, cfg: ModelConfig):
+    k = max(cfg.microbatches, 1)
+    loss_grad = jax.value_and_grad(model.train_loss, has_aux=True)
+    if k == 1:
+        (loss, metrics), grads = loss_grad(params, batch, cfg)
+        return grads, metrics
+
+    def resh(x):
+        b = x.shape[0]
+        assert b % k == 0, f"batch {b} not divisible by microbatches {k}"
+        return x.reshape((k, b // k) + x.shape[1:])
+
+    micro = jax.tree.map(resh, batch)
+
+    def body(acc, mb):
+        (loss, metrics), grads = loss_grad(params, mb, cfg)
+        acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / k, acc, grads
+        )
+        return acc, metrics
+
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    grads, metrics = jax.lax.scan(body, zeros, micro)
+    metrics = jax.tree.map(lambda m: m.mean(), metrics)
+    return grads, metrics
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+def train_step(state, batch, cfg: ModelConfig, ocfg: AdamWConfig,
+               scfg: ScheduleConfig):
+    grads, metrics = _grads_and_metrics(state["params"], batch, cfg)
+    lr = warmup_cosine(state["step"], scfg)
+    params, opt, gnorm = opt_lib.adamw_update(
+        state["params"], grads, state["opt"], lr, ocfg
+    )
+    metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+    return (
+        {"params": params, "opt": opt, "step": state["step"] + 1},
+        metrics,
+    )
+
+
+def make_compressed_train_step(cfg: ModelConfig, ocfg: AdamWConfig,
+                               scfg: ScheduleConfig, mesh):
+    """Train step with the pod axis manual + int8 grad sync (compress.py).
+
+    Batch must arrive sharded over ('pod','data') on dim 0; inside the
+    region each pod computes grads on its local batch half, then syncs.
+    """
+    sync, auto, n_pods = compress_lib.make_pod_sync(mesh)
+
+    def body(state, batch):
+        grads, metrics = _grads_and_metrics(state["params"], batch, cfg)
+        grads, err = sync(grads, state["err"])
+        lr = warmup_cosine(state["step"], scfg)
+        params, opt, gnorm = opt_lib.adamw_update(
+            state["params"], grads, state["opt"], lr, ocfg
+        )
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+        new_state = {
+            "params": params, "opt": opt,
+            "step": state["step"] + 1, "err": err,
+        }
+        return new_state, metrics
+
+    # state replicated over pod; err is pod-local (manual) so also P() —
+    # each pod keeps its own residual, which is exactly error feedback.
+    # `axis_names={"pod"}` makes ONLY the pod axis manual: data/model
+    # sharding inside stays automatic (GSPMD).
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P("pod")),
+        out_specs=(P(), P()),
+        axis_names=frozenset({"pod"}),
+        check_vma=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def serve_prefill(params, batch, cfg: ModelConfig):
+    return model.prefill(params, batch, cfg)
+
+
+def serve_step(params, caches, token, pos, cfg: ModelConfig):
+    """One decode step; greedy next token.  → (next_token, logits, caches)."""
+    logits, caches = model.decode_step(params, caches, token, pos, cfg)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return nxt, logits, caches
+
+
+# ---------------------------------------------------------------------------
+# jit plumbing
+# ---------------------------------------------------------------------------
+def resolve_shardings(spec_tree, mesh, rules):
+    from repro.sharding.specs import tree_shardings
+
+    return tree_shardings(spec_tree, mesh, rules)
+
+
+def jit_train_step(cfg, ocfg, scfg, mesh, rules, batch_shapes, batch_specs,
+                   compress: bool = False):
+    """→ (jitted step, state_shapes, state_shardings, batch_shardings)."""
+    from repro.sharding.specs import fitted_shardings, use_mesh
+
+    state_shapes, state_specs = abstract_state(cfg, ocfg, compress)
+    state_sh = fitted_shardings(state_shapes, state_specs, mesh, rules)
+    batch_sh = fitted_shardings(batch_shapes, batch_specs, mesh, rules)
+
+    if compress:
+        fn = make_compressed_train_step(cfg, ocfg, scfg, mesh)
+    else:
+        fn = functools.partial(train_step, cfg=cfg, ocfg=ocfg, scfg=scfg)
+
+    # inside the pod-manual region, constraints must not mention `pod`
+    trace_rules = rules.without_axis("pod") if compress else rules
+
+    def traced(state, batch):
+        # the mesh context must be live while the model traces (it drives
+        # every logical_constraint inside the graph)
+        with use_mesh(mesh, trace_rules):
+            return fn(state, batch)
+
+    step = jax.jit(
+        traced,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    return step, state_shapes, state_sh, batch_sh

@@ -1,0 +1,158 @@
+"""Block store, elastic scheduler, and the qd-tree training pipeline."""
+
+import numpy as np
+import pytest
+
+from repro.core import greedy, query as qry, predicates as preds
+from repro.data.blocks import BlockStore
+from repro.data.pipeline import (
+    ElasticBlockScheduler,
+    PipelineConfig,
+    QdTreePipeline,
+    records_to_tokens,
+)
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory, request):
+    from repro.data import datagen, workload as wl
+
+    schema, records = datagen.make_errorlog_int(5_000, seed=0)
+    work, _ = wl.make_errorlog_int_workload(schema, n_queries=40, seed=0)
+    cuts = work.candidate_cuts()
+    tree = greedy.build_greedy(
+        records, work, cuts, greedy.GreedyConfig(min_block=250)
+    )
+    path = tmp_path_factory.mktemp("blocks")
+    return (
+        BlockStore.create(path, tree.freeze(), records),
+        schema, records, work,
+    )
+
+
+def test_scan_query_exact(store):
+    bs, schema, records, work = store
+    for q in work.queries[:10]:
+        res = bs.scan_query(q)
+        truth = records[q.evaluate(records, schema)]
+        got = res.rows[np.lexsort(res.rows.T)] if res.rows.size else res.rows
+        want = truth[np.lexsort(truth.T)] if truth.size else truth
+        np.testing.assert_array_equal(got, want)
+        assert res.blocks_read <= bs.tree.n_leaves
+        assert res.bytes_read == res.rows_scanned * bs.row_bytes
+
+
+def test_scan_skips_blocks(store):
+    bs, schema, records, work = store
+    reads = [bs.scan_query(q).blocks_read for q in work.queries[:30]]
+    # highly selective errorlog queries must skip most blocks
+    assert np.mean(reads) < 0.5 * bs.tree.n_leaves
+
+
+def test_store_roundtrip(store, tmp_path):
+    bs, schema, records, work = store
+    reopened = BlockStore.open(bs.root)
+    assert reopened.tree.n_leaves == bs.tree.n_leaves
+    q = work.queries[0]
+    np.testing.assert_array_equal(
+        np.sort(reopened.scan_query(q).rows, axis=0),
+        np.sort(bs.scan_query(q).rows, axis=0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# elastic scheduler
+# ---------------------------------------------------------------------------
+def test_scheduler_work_stealing():
+    s = ElasticBlockScheduler(list(range(10)), seed=0)
+    w0 = [s.next_block(0) for _ in range(4)]
+    w1 = [s.next_block(1) for _ in range(3)]
+    lost = s.fail(0)  # worker 0 dies with 4 unacked blocks
+    assert sorted(lost) == sorted(w0)
+    # its blocks are re-queued at the front
+    stolen = [s.next_block(1) for _ in range(4)]
+    assert sorted(stolen) == sorted(w0)
+    for b in w1 + stolen:
+        s.ack(1, b)
+    rest = []
+    while True:
+        b = s.next_block(1)
+        if b is None or s.epoch > 0:
+            break
+        rest.append(b)
+        s.ack(1, b)
+    assert s.epoch == 1  # epoch advanced exactly once all acked
+
+
+def test_scheduler_epoch_shuffles_deterministically():
+    a = ElasticBlockScheduler(list(range(8)), seed=7)
+    b = ElasticBlockScheduler(list(range(8)), seed=7)
+    seq_a = [a.next_block(0) for _ in range(8)]
+    seq_b = [b.next_block(0) for _ in range(8)]
+    assert seq_a == seq_b
+    assert sorted(seq_a) == list(range(8))
+
+
+def test_scheduler_checkpoint_restore():
+    s = ElasticBlockScheduler(list(range(6)), seed=1)
+    done = [s.next_block(0) for _ in range(2)]
+    for b in done:
+        s.ack(0, b)
+    inflight = s.next_block(0)
+    st = s.state()
+    s2 = ElasticBlockScheduler(list(range(6)), seed=1)
+    s2.restore(st)
+    # in-flight blocks come back as pending
+    remaining = []
+    while True:
+        b = s2.next_block(0)
+        if b is None or s2.epoch > st.epoch:
+            break
+        remaining.append(b)
+        s2.ack(0, b)
+    assert sorted(remaining + done) == list(range(6))
+    assert inflight in remaining
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+def test_tokens_deterministic():
+    rows = np.arange(12, dtype=np.int32).reshape(3, 4)
+    a = records_to_tokens(rows, 16, 1000, seed=1)
+    b = records_to_tokens(rows, 16, 1000, seed=1)
+    np.testing.assert_array_equal(a, b)
+    c = records_to_tokens(rows, 16, 1000, seed=2)
+    assert not np.array_equal(a, c)
+
+
+def test_pipeline_curation_skips_blocks(store):
+    bs, schema, records, work = store
+    d = schema.dim
+    curation = qry.Query.conjunction([
+        qry.InAtom(d("event_type"), (0,)),
+        qry.InAtom(d("is_valid"), (1,)),
+    ])
+    cfg = PipelineConfig(
+        batch_size=16, seq_len=8, vocab=100, curation_query=curation
+    )
+    pipe = QdTreePipeline(bs, cfg)
+    assert pipe.blocks_skipped > 0
+    toks, labels = next(iter(pipe))
+    assert toks.shape == (16, 8) and labels.shape == (16, 8)
+    assert (toks >= 0).all() and (toks < 100).all()
+
+
+def test_pipeline_batches_only_matching_records(store):
+    bs, schema, records, work = store
+    d = schema.dim
+    curation = qry.Query.conjunction([qry.InAtom(d("event_type"), (2,))])
+    n_match = int(curation.evaluate(records, schema).sum())
+    cfg = PipelineConfig(
+        batch_size=8, seq_len=4, vocab=50, curation_query=curation,
+        epochs=1,
+    )
+    pipe = QdTreePipeline(bs, cfg)
+    total = sum(t.shape[0] for t, _ in pipe)
+    # every full batch of 8 comes from matching rows only
+    assert total == (n_match // 8) * 8

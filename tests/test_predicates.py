@@ -1,0 +1,122 @@
+"""Unit + property tests for cuts and predicate evaluation."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predicates as preds
+from repro.core.predicates import Column, CutTableBuilder, Schema
+from repro.core import routing
+
+
+def tiny_schema():
+    return Schema((
+        Column("a", "numeric", 100),
+        Column("b", "numeric", 50),
+        Column("c", "categorical", 8),
+        Column("d", "categorical", 5),
+    ))
+
+
+def test_schema_validation():
+    s = tiny_schema()
+    assert s.ndims == 4
+    assert s.total_cat_bits == 13
+    assert s.cat_offsets.tolist() == [-1, -1, 0, 8]
+    with pytest.raises(ValueError):
+        Schema((Column("x", "weird", 3),))
+    with pytest.raises(ValueError):
+        s.validate_records(np.array([[100, 0, 0, 0]], np.int32))
+
+
+def test_cut_canonicalization_and_dedup():
+    s = tiny_schema()
+    b = CutTableBuilder(s)
+    b.add_range(0, preds.OP_LT, 10)
+    b.add_range(0, preds.OP_GE, 10)  # same cutpoint → dedup
+    b.add_range(0, preds.OP_LE, 9)  # v <= 9 ⇒ v < 10 → dedup
+    b.add_range(0, preds.OP_GT, 9)  # → v < 10 → dedup
+    cuts = b.build()
+    assert cuts.n_cuts == 1
+    assert cuts.describe(0) == "a < 10"
+
+
+def test_trivial_cuts_dropped():
+    s = tiny_schema()
+    b = CutTableBuilder(s)
+    b.add_range(0, preds.OP_GE, 0)  # cutpoint 0: splits nothing
+    b.add_range(1, preds.OP_LT, 50)  # cutpoint == dom: splits nothing
+    b.add_in(2, [0, 1, 2, 3, 4, 5, 6, 7])  # full domain
+    b.add_in(3, [])
+    assert b.build().n_cuts == 0
+
+
+def test_eq_makes_two_cuts():
+    s = tiny_schema()
+    b = CutTableBuilder(s)
+    b.add_range(0, preds.OP_EQ, 7)
+    cuts = b.build()
+    assert cuts.n_cuts == 2  # v<7 and v<8 isolate [7,8)
+
+
+def test_in_cut_eval():
+    s = tiny_schema()
+    b = CutTableBuilder(s)
+    b.add_in(2, [1, 3])
+    b.add_in(3, [0])
+    cuts = b.build()
+    recs = np.array(
+        [[0, 0, 1, 0], [0, 0, 3, 1], [0, 0, 2, 0]], np.int32
+    )
+    m = preds.eval_cuts(recs, cuts)
+    np.testing.assert_array_equal(
+        m, [[True, True], [True, False], [False, True]]
+    )
+
+
+def test_adv_cut_eval():
+    s = tiny_schema()
+    b = CutTableBuilder(s)
+    b.add_adv(0, preds.OP_LT, 1)
+    cuts = b.build()
+    recs = np.array([[5, 9, 0, 0], [9, 5, 0, 0], [5, 5, 0, 0]], np.int32)
+    m = preds.eval_cuts(recs, cuts)
+    np.testing.assert_array_equal(m[:, 0], [True, False, False])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_eval_cuts_jax_matches_numpy(data):
+    """Property: the jnp predicate matrix is bit-identical to numpy."""
+    s = tiny_schema()
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    b = CutTableBuilder(s)
+    for _ in range(data.draw(st.integers(1, 6))):
+        kind = data.draw(st.sampled_from(["range", "in", "adv"]))
+        if kind == "range":
+            dim = data.draw(st.sampled_from([0, 1]))
+            op = data.draw(st.sampled_from(
+                [preds.OP_LT, preds.OP_LE, preds.OP_GT, preds.OP_GE]
+            ))
+            b.add_range(dim, op, int(rng.integers(1, s.columns[dim].dom)))
+        elif kind == "in":
+            dim = data.draw(st.sampled_from([2, 3]))
+            dom = s.columns[dim].dom
+            k = data.draw(st.integers(1, dom - 1))
+            b.add_in(dim, rng.choice(dom, k, replace=False).tolist())
+        else:
+            b.add_adv(0, preds.OP_LT, 1)
+    cuts = b.build()
+    if cuts.n_cuts == 0:
+        return
+    m = data.draw(st.integers(1, 64))
+    recs = np.stack(
+        [rng.integers(0, c.dom, m) for c in s.columns], axis=1
+    ).astype(np.int32)
+    ref = preds.eval_cuts(recs, cuts)
+    import jax.numpy as jnp
+
+    got = np.asarray(
+        routing.eval_cuts_jax(jnp.asarray(recs), routing.cut_arrays(cuts))
+    )
+    np.testing.assert_array_equal(ref, got)

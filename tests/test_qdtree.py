@@ -1,0 +1,171 @@
+"""Qd-tree structure tests + the paper's two core properties:
+
+* semantic description — every routed record satisfies its leaf's
+  description (range ∩ categorical mask ∩ advanced bits),
+* completeness — every record satisfying a leaf's description is routed
+  to that leaf (binary cuts ⇒ leaves partition the space).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predicates as preds
+from repro.core import query as qry
+from repro.core.predicates import Column, CutTableBuilder, Schema
+from repro.core.qdtree import FrozenQdTree, child_descs, root_desc, singleton_tree
+
+
+def small_setup(seed=0, m=500):
+    schema = Schema((
+        Column("x", "numeric", 64),
+        Column("y", "numeric", 32),
+        Column("c", "categorical", 6),
+    ))
+    rng = np.random.default_rng(seed)
+    records = np.stack([
+        rng.integers(0, 64, m),
+        rng.integers(0, 32, m),
+        rng.integers(0, 6, m),
+    ], axis=1).astype(np.int32)
+    b = CutTableBuilder(schema)
+    for c in (8, 16, 24, 32, 48):
+        b.add_range(0, preds.OP_LT, c)
+    for c in (8, 16, 24):
+        b.add_range(1, preds.OP_LT, c)
+    b.add_in(2, [0, 1])
+    b.add_in(2, [2])
+    b.add_adv(0, preds.OP_LT, 1)
+    return schema, records, b.build()
+
+
+def random_tree(schema, cuts, records, rng, max_splits=10):
+    tree = singleton_tree(schema, cuts, np.arange(records.shape[0]))
+    M = preds.eval_cuts(records, cuts)
+    leaves = {id(tree.root): tree.root}
+    for _ in range(max_splits):
+        splittable = [n for n in leaves.values() if n.size >= 2]
+        if not splittable:
+            break
+        node = splittable[rng.integers(0, len(splittable))]
+        legal = []
+        for c in range(cuts.n_cuts):
+            col = M[node.rows, c]
+            if 0 < col.sum() < node.size:
+                legal.append(c)
+        if not legal:
+            del leaves[id(node)]
+            continue
+        cut = legal[rng.integers(0, len(legal))]
+        l, r = tree.split(node, cut, cut_matrix=M)
+        del leaves[id(node)]
+        leaves[id(l)] = l
+        leaves[id(r)] = r
+    return tree
+
+
+def desc_satisfied(rec, lo, hi, cat, adv, schema, cuts):
+    ok = True
+    for dim in range(schema.ndims):
+        if schema.is_categorical[dim]:
+            off = schema.cat_offsets[dim]
+            ok &= bool(cat[off + rec[dim]])
+        else:
+            ok &= bool(lo[dim] <= rec[dim] < hi[dim])
+    truth = preds.eval_adv(rec[None], cuts.adv)[0]
+    for a in range(cuts.n_adv):
+        ok &= bool(adv[a, 0]) if truth[a] else bool(adv[a, 1])
+    return ok
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_routing_semantic_description_and_completeness(seed):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    tree = random_tree(schema, cuts, records, rng)
+    frozen = tree.freeze()
+    bids = frozen.route(records)
+    assert (bids >= 0).all() and (bids < frozen.n_leaves).all()
+    # descriptions BEFORE tightening partition the space: each record
+    # satisfies exactly one leaf description (= completeness + uniqueness)
+    sample = records[rng.choice(records.shape[0], 64, replace=False)]
+    sbids = frozen.route(sample)
+    for rec, bid in zip(sample, sbids):
+        hits = [
+            l
+            for l in range(frozen.n_leaves)
+            if desc_satisfied(
+                rec, frozen.leaf_lo[l], frozen.leaf_hi[l],
+                frozen.leaf_cat[l], frozen.leaf_adv[l], schema, cuts,
+            )
+        ]
+        assert hits == [int(bid)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_tighten_preserves_membership(seed):
+    """Tightened (min-max) descriptions still cover every routed record."""
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    tree = random_tree(schema, cuts, records, rng)
+    frozen = tree.freeze()
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    for i in rng.choice(records.shape[0], 64, replace=False):
+        bid = bids[i]
+        assert desc_satisfied(
+            records[i], frozen.leaf_lo[bid], frozen.leaf_hi[bid],
+            frozen.leaf_cat[bid], frozen.leaf_adv[bid], schema, cuts,
+        )
+
+
+def test_child_descs_restrict():
+    schema, records, cuts = small_setup()
+    root = root_desc(schema, cuts.n_adv)
+    # range cut
+    rng_cut = int(np.nonzero(cuts.kind == preds.KIND_RANGE)[0][0])
+    l, r = child_descs(root, cuts, rng_cut)
+    d, c = int(cuts.dim[rng_cut]), int(cuts.cutpoint[rng_cut])
+    assert l.hi[d] == c and r.lo[d] == c
+    # in cut
+    in_cut = int(np.nonzero(cuts.kind == preds.KIND_IN)[0][0])
+    l, r = child_descs(root, cuts, in_cut)
+    seg = schema.cat_segment(int(cuts.dim[in_cut]))
+    assert not (l.cat[seg] & r.cat[seg]).any()
+    assert (l.cat[seg] | r.cat[seg]).all()
+    # adv cut
+    adv_cut = int(np.nonzero(cuts.kind == preds.KIND_ADV)[0][0])
+    l, r = child_descs(root, cuts, adv_cut)
+    assert l.adv[0].tolist() == [True, False]
+    assert r.adv[0].tolist() == [False, True]
+
+
+def test_freeze_roundtrip(tmp_path):
+    schema, records, cuts = small_setup()
+    rng = np.random.default_rng(3)
+    tree = random_tree(schema, cuts, records, rng)
+    frozen = tree.freeze()
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    path = str(tmp_path / "tree.npz")
+    frozen.save(path)
+    loaded = FrozenQdTree.load(path)
+    np.testing.assert_array_equal(loaded.route(records), bids)
+    np.testing.assert_array_equal(loaded.leaf_lo, frozen.leaf_lo)
+    np.testing.assert_array_equal(loaded.leaf_cat, frozen.leaf_cat)
+
+
+def test_route_backends_agree(tpch_tree, tpch_small):
+    from repro.core import routing
+
+    schema, records, work, cuts = tpch_small
+    frozen, bids = tpch_tree
+    np.testing.assert_array_equal(
+        routing.route(frozen, records[:2048], backend="jax"), bids[:2048]
+    )
+    np.testing.assert_array_equal(
+        routing.route(frozen, records[:2048], backend="pallas"),
+        bids[:2048],
+    )

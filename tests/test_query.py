@@ -1,0 +1,105 @@
+"""Query processing: DNF intersection is conservative (no false negatives),
+BID routing returns exactly the intersecting blocks."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predicates as preds
+from repro.core import query as qry
+from repro.core import rewards
+from tests.test_qdtree import random_tree, small_setup
+
+
+def random_query(schema, rng) -> qry.Query:
+    def atom():
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            dim = int(rng.integers(0, 2))
+            op = int(rng.choice(
+                [preds.OP_LT, preds.OP_LE, preds.OP_GT, preds.OP_GE]
+            ))
+            return qry.RangeAtom(dim, op, int(rng.integers(0, 64)))
+        if kind == 1:
+            k = int(rng.integers(1, 4))
+            vals = tuple(int(v) for v in rng.choice(6, k, replace=False))
+            return qry.InAtom(2, vals)
+        return qry.AdvAtom(0, preds.OP_LT, 1, polarity=bool(rng.integers(2)))
+
+    n_conj = int(rng.integers(1, 3))
+    return qry.Query.disjunction([
+        [atom() for _ in range(int(rng.integers(1, 4)))]
+        for _ in range(n_conj)
+    ])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_intersection_no_false_negatives(seed):
+    """If any record in block b matches query q, q must intersect b."""
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    tree = random_tree(schema, cuts, records, rng)
+    frozen = tree.freeze()
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    queries = tuple(random_query(schema, rng) for _ in range(10))
+    work = qry.Workload(schema, queries)
+    wt = work.tensorize(cuts)
+    hits = rewards.block_query_hits(frozen, wt)  # (L, Q)
+    for qi, q in enumerate(queries):
+        truth = q.evaluate(records, schema)
+        blocks_with_matches = set(np.unique(bids[truth]).tolist())
+        claimed = set(np.nonzero(hits[:, qi])[0].tolist())
+        assert blocks_with_matches <= claimed, (
+            f"query {qi}: blocks {blocks_with_matches - claimed} "
+            "have matches but were pruned"
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_route_query_matches_hits(seed):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    tree = random_tree(schema, cuts, records, rng)
+    frozen = tree.freeze()
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    q = random_query(schema, rng)
+    got = set(qry.route_query(frozen, q).tolist())
+    wt = qry.Workload(schema, (q,)).tensorize(cuts)
+    want = set(np.nonzero(rewards.block_query_hits(frozen, wt)[:, 0])[0].tolist())
+    assert got == want
+
+
+def test_scan_fraction_sanity(tpch_tree, tpch_small):
+    schema, records, work, cuts = tpch_small
+    frozen, bids = tpch_tree
+    stats = rewards.evaluate_layout(frozen, records, work, tighten=False)
+    lb = rewards.selectivity_lower_bound(records, work)
+    assert lb <= stats.scanned_fraction <= 1.0
+    # greedy must beat a full scan substantially on TPC-H-like data
+    assert stats.scanned_fraction < 0.7
+
+
+def test_adv_polarity_pruning():
+    """A block of all commit<receipt rows must be pruned for NOT(q)."""
+    schema, records, cuts = small_setup(7)
+    rng = np.random.default_rng(7)
+    tree = random_tree(schema, cuts, records, rng)
+    frozen = tree.freeze()
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    truth = records[:, 0] < records[:, 1]
+    pos = qry.Query.conjunction([qry.AdvAtom(0, preds.OP_LT, 1, True)])
+    neg = qry.Query.conjunction([qry.AdvAtom(0, preds.OP_LT, 1, False)])
+    pos_blocks = set(qry.route_query(frozen, pos).tolist())
+    neg_blocks = set(qry.route_query(frozen, neg).tolist())
+    for b in range(frozen.n_leaves):
+        rows = truth[bids == b]
+        if rows.size == 0:
+            continue
+        if rows.all():
+            assert b not in neg_blocks
+        if (~rows).all():
+            assert b not in pos_blocks

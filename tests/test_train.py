@@ -1,0 +1,185 @@
+"""Training substrate: optimizer (fp32 + int8), schedules, microbatching,
+checkpoint/restart, failure injection, straggler watchdog."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_lib
+from repro.train import steps
+from repro.train.loop import (
+    FailureInjector,
+    LoopConfig,
+    StragglerWatch,
+    maybe_restore,
+    train_loop,
+)
+from repro.train.optimizer import AdamWConfig
+from repro.train.schedule import ScheduleConfig, warmup_cosine
+
+CFG = get_config("qwen1.5-32b").reduced(n_layers=2)
+OCFG = AdamWConfig()
+SCFG = ScheduleConfig(peak_lr=1e-3, warmup_steps=5, total_steps=100)
+
+
+def batch_stream(seed=0, B=8, S=32):
+    rng = np.random.default_rng(seed)
+    while True:
+        t = rng.integers(0, CFG.vocab, (B, S + 1)).astype(np.int32)
+        yield {
+            "tokens": jnp.asarray(t[:, :-1]),
+            "labels": jnp.asarray(t[:, 1:]),
+        }
+
+
+@pytest.fixture(scope="module")
+def jitted_step():
+    return jax.jit(lambda s, b: steps.train_step(s, b, CFG, OCFG, SCFG))
+
+
+def test_loss_decreases(jitted_step):
+    state = steps.init_train_state(jax.random.PRNGKey(0), CFG, OCFG)
+    it = batch_stream()
+    losses = []
+    for _ in range(15):
+        state, m = jitted_step(state, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_int8_optimizer_tracks_fp32():
+    o8 = AdamWConfig(eight_bit=True)
+    s32 = steps.init_train_state(jax.random.PRNGKey(0), CFG, OCFG)
+    s8 = steps.init_train_state(jax.random.PRNGKey(0), CFG, o8)
+    f32 = jax.jit(lambda s, b: steps.train_step(s, b, CFG, OCFG, SCFG))
+    f8 = jax.jit(lambda s, b: steps.train_step(s, b, CFG, o8, SCFG))
+    a, b = [], []
+    it1, it2 = batch_stream(1), batch_stream(1)
+    for _ in range(15):
+        s32, m32 = f32(s32, next(it1))
+        s8, m8 = f8(s8, next(it2))
+        a.append(float(m32["loss"]))
+        b.append(float(m8["loss"]))
+    assert b[-1] < b[0]
+    assert abs(a[-1] - b[-1]) < 0.4  # int8 moments track fp32 closely
+    # int8 state really is int8
+    q_leaves = [
+        x for x in jax.tree.leaves(s8["opt"]["m"]) if x.dtype == jnp.int8
+    ]
+    assert q_leaves, "no quantized moment tensors found"
+
+
+def test_quantize_roundtrip_property():
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def run(seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(
+            rng.standard_normal((8, 64)) * 10 ** rng.uniform(-6, 2),
+            jnp.float32,
+        )
+        qs = opt_lib.quantize(x)
+        err = np.abs(np.asarray(opt_lib.dequantize(qs)) - np.asarray(x))
+        bound = np.abs(np.asarray(x)).max(axis=1, keepdims=True) / 127 + 1e-12
+        assert (err <= bound + 1e-9).all()
+
+    run()
+
+
+def test_microbatch_equivalence():
+    cfg_mb = dataclasses.replace(CFG, microbatches=4)
+    s_a = steps.init_train_state(jax.random.PRNGKey(0), CFG, OCFG)
+    s_b = steps.init_train_state(jax.random.PRNGKey(0), cfg_mb, OCFG)
+    batch = next(batch_stream(2))
+    s_a, _ = jax.jit(
+        lambda s, b: steps.train_step(s, b, CFG, OCFG, SCFG)
+    )(s_a, batch)
+    s_b, _ = jax.jit(
+        lambda s, b: steps.train_step(s, b, cfg_mb, OCFG, SCFG)
+    )(s_b, batch)
+    for x, y in zip(
+        jax.tree.leaves(s_a["params"]), jax.tree.leaves(s_b["params"])
+    ):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), atol=2e-5
+        )
+
+
+def test_schedule_shape():
+    s = jnp.arange(0, 100)
+    lr = warmup_cosine(s, SCFG)
+    assert float(lr[0]) == 0.0
+    assert abs(float(lr[5]) - SCFG.peak_lr) < 1e-9
+    assert float(lr[99]) < SCFG.peak_lr
+    assert float(lr[99]) >= SCFG.final_frac * SCFG.peak_lr * 0.99
+
+
+def test_checkpoint_roundtrip(tmp_path, jitted_step):
+    state = steps.init_train_state(jax.random.PRNGKey(0), CFG, OCFG)
+    state, _ = jitted_step(state, next(batch_stream()))
+    ckpt.save_checkpoint(tmp_path, 3, state)
+    shapes, _ = steps.abstract_state(CFG, OCFG)
+    restored = ckpt.restore_checkpoint(tmp_path, 3, shapes)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    state = steps.init_train_state(jax.random.PRNGKey(0), CFG, OCFG)
+    for s in (1, 2, 3, 4):
+        ckpt.save_checkpoint(tmp_path, s, state, keep=2)
+    assert ckpt.all_steps(tmp_path) == [3, 4]
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_failure_injection_and_resume(tmp_path, jitted_step):
+    lcfg = LoopConfig(
+        total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=4, log_every=0
+    )
+    s0 = steps.init_train_state(jax.random.PRNGKey(0), CFG, OCFG)
+    it = batch_stream(3)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_loop(
+            jitted_step, s0, it, lcfg,
+            failure=FailureInjector(fail_at_step=9),
+        )
+    shapes, _ = steps.abstract_state(CFG, OCFG)
+    st, step = maybe_restore(str(tmp_path), shapes)
+    assert step == 8
+    st2, hist = train_loop(jitted_step, st, it, lcfg)
+    assert int(np.asarray(st2["step"])) == 12
+    assert [h["step"] for h in hist] == [8, 9, 10, 11]
+
+
+def test_straggler_watch_flags_outlier():
+    fired = []
+    w = StragglerWatch(
+        z=3.0, warmup=5, on_straggle=lambda s, dt, mu: fired.append(s)
+    )
+    for i in range(20):
+        w.observe(i, 0.1 + 0.001 * (i % 3))
+    w.observe(20, 5.0)
+    assert fired == [20]
+
+
+def test_grad_clip_applied():
+    state = steps.init_train_state(jax.random.PRNGKey(0), CFG, OCFG)
+    batch = next(batch_stream())
+    # huge lr would diverge instantly without clipping; assert the reported
+    # grad norm > clip means the applied step was rescaled (params finite)
+    hot = ScheduleConfig(peak_lr=1.0, warmup_steps=0, total_steps=10)
+    s1, m = jax.jit(
+        lambda s, b: steps.train_step(s, b, CFG, OCFG, hot)
+    )(state, batch)
+    assert np.isfinite(
+        sum(float(jnp.sum(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(s1["params"]))
+    )

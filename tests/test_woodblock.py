@@ -1,0 +1,89 @@
+"""WOODBLOCK (deep-RL construction): env legality, rewards, learning."""
+
+import numpy as np
+
+from repro.core import predicates as preds, query as qry, rewards
+from repro.core.woodblock.agent import WoodblockConfig, build_woodblock
+from repro.core.woodblock.env import TreeEnv
+from repro.core.woodblock.featurize import Featurizer
+from tests.test_greedy import fig3_setup
+
+
+def test_stopping_condition_legality():
+    schema, records, work, cuts = fig3_setup(n=2_000)
+    env = TreeEnv(records, work, cuts, min_block_sample=15)
+    legal = env.legal_actions(
+        __import__("repro.core.qdtree", fromlist=["singleton_tree"])
+        .singleton_tree(schema, cuts, np.arange(records.shape[0]))
+        .root
+    )
+    M = preds.eval_cuts(records, cuts)
+    left = M.sum(axis=0)
+    right = records.shape[0] - left
+    np.testing.assert_array_equal(legal, (left >= 15) & (right >= 15))
+
+
+def test_rewards_normalized():
+    schema, records, work, cuts = fig3_setup(n=2_000)
+    env = TreeEnv(records, work, cuts, min_block_sample=15)
+    rng = np.random.default_rng(0)
+
+    def random_policy(states, legals):
+        acts = np.array(
+            [rng.choice(np.nonzero(l)[0]) for l in legals], np.int64
+        )
+        return acts, np.zeros(len(acts)), np.zeros(len(acts))
+
+    res = env.run_episode(random_policy, rng)
+    assert res.transitions, "no cuts made"
+    for t in res.transitions:
+        assert 0.0 <= t.reward <= 1.0
+    assert 0.0 <= res.scanned_fraction <= 1.0
+
+
+def test_woodblock_finds_fig3_layout():
+    """RL beats greedy on the paper's Fig-3 disjunction scenario."""
+    from repro.core import greedy
+
+    schema, records, work, cuts = fig3_setup(n=8_000)
+    g = greedy.build_greedy(
+        records, work, cuts, greedy.GreedyConfig(min_block=40)
+    )
+    g_stats = rewards.evaluate_layout(g.freeze(), records, work)
+
+    cfg = WoodblockConfig(
+        min_block_sample=40, n_iters=12, episodes_per_iter=4, seed=0
+    )
+    res = build_woodblock(records, work, cuts, cfg)
+    assert res.best_scanned < 0.6 * g_stats.scanned_fraction, (
+        res.best_scanned, g_stats.scanned_fraction,
+    )
+
+
+def test_learning_curve_improves(errorlog_small):
+    schema, records, work, cuts = errorlog_small
+    cfg = WoodblockConfig(
+        min_block_sample=300, n_iters=8, episodes_per_iter=3, seed=1
+    )
+    res = build_woodblock(records, work, cuts, cfg)
+    first = res.curve[0].best_scanned
+    assert res.best_scanned <= first
+    assert res.n_episodes == len(res.curve)
+    # curve's best is monotonically non-increasing
+    bests = [p.best_scanned for p in res.curve]
+    assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(bests, bests[1:]))
+
+
+def test_featurizer_binary_encoding():
+    from repro.core.qdtree import root_desc
+
+    schema, records, work, cuts = fig3_setup(n=100)
+    f = Featurizer(schema, cuts.n_adv)
+    desc = root_desc(schema, cuts.n_adv)
+    v = f(desc)
+    assert v.shape == (f.dim,)
+    assert set(np.unique(v)).issubset({0.0, 1.0})
+    # restricting a bound changes the encoding
+    desc2 = root_desc(schema, cuts.n_adv)
+    desc2.hi[0] = 10
+    assert not np.array_equal(f(desc2), v)
