@@ -1,0 +1,113 @@
+"""Routing throughput through the LayoutEngine: backends × cold/warm cache.
+
+For each registered backend this measures
+
+  * cold:  first batch at a fresh bucket geometry (includes operand packing
+           + jit/Pallas trace + compile),
+  * warm:  a NEW batch of a different size in the SAME power-of-two bucket
+           (must hit the compiled plan — asserted to trigger ZERO retraces
+           via the engine's trace counters).
+
+Results land in ``BENCH_routing_throughput.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.routing_throughput
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.engine import LayoutEngine, available_backends
+from repro.engine import plan as planlib
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_routing_throughput.json"
+)
+
+
+def _time_route(engine, batch, backend, reps=3):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = engine.route(batch, backend=backend)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt
+
+
+def run(scale: float = 0.5, seed: int = 0) -> dict:
+    from repro.core import greedy
+
+    schema, records, work, labels, cuts, min_block = common.load_workload(
+        "tpch", scale, seed
+    )
+    tree = greedy.build_greedy(
+        records, work, cuts, greedy.GreedyConfig(min_block=min_block)
+    )
+    frozen = tree.freeze()
+    oracle_bids = frozen.route(records)
+    frozen.tighten(records, oracle_bids)
+
+    engine = LayoutEngine(frozen)
+    # cold batch and warm batch: different sizes, same power-of-two bucket
+    m_cold = min(24_576, records.shape[0])
+    m_warm = min(20_000, records.shape[0] - 1)
+    assert planlib.pad_bucket(m_cold, 256) == planlib.pad_bucket(m_warm, 256)
+    cold_batch = records[:m_cold]
+    warm_batch = records[-m_warm:]
+
+    results: dict = {"backends": {}, "n_blocks": int(frozen.n_leaves)}
+    for backend in available_backends():
+        t0 = time.perf_counter()
+        out_cold = engine.route(cold_batch, backend=backend)
+        cold_s = time.perf_counter() - t0
+        np.testing.assert_array_equal(out_cold, oracle_bids[:m_cold])
+
+        traces_before = planlib.trace_counts()
+        cache_before = dict(engine.plans.stats())
+        out_warm, warm_s = _time_route(engine, warm_batch, backend)
+        traces_after = planlib.trace_counts()
+        cache_after = dict(engine.plans.stats())
+        np.testing.assert_array_equal(out_warm, oracle_bids[-m_warm:])
+
+        retraces = sum(traces_after.values()) - sum(traces_before.values())
+        # acceptance: warm same-bucket batches reuse the compiled plan
+        assert retraces == 0, (
+            f"backend {backend}: warm same-bucket batch retraced "
+            f"{retraces}x ({traces_before} -> {traces_after})"
+        )
+        if backend != "numpy":
+            assert cache_after["hits"] > cache_before["hits"], (
+                f"backend {backend}: warm batch did not hit the plan cache"
+            )
+
+        results["backends"][backend] = {
+            "cold_batch": int(m_cold),
+            "cold_s": cold_s,
+            "cold_records_per_s": float(m_cold / cold_s),
+            "warm_batch": int(m_warm),
+            "warm_s": warm_s,
+            "warm_records_per_s": float(m_warm / warm_s),
+            "warm_retraces": int(retraces),
+            "speedup_warm_vs_cold": float(
+                (m_warm / warm_s) / (m_cold / cold_s)
+            ),
+        }
+        print(
+            f"[routing_throughput] {backend:>6}: cold "
+            f"{m_cold / cold_s:>12,.0f} rec/s | warm "
+            f"{m_warm / warm_s:>12,.0f} rec/s | warm retraces: {retraces}"
+        )
+
+    results["plan_cache"] = engine.plans.stats()
+    results["traces"] = planlib.trace_counts()
+    OUT.write_text(json.dumps(results, indent=2))
+    print(f"[routing_throughput] wrote {OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ Two representations:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 from typing import Iterator, Optional
@@ -216,9 +217,9 @@ class QdTree:
     def freeze(self) -> "FrozenQdTree":
         """Flatten to arrays; assign BIDs to leaves in BFS order."""
         order: list[Node] = []
-        bfs = [self.root]
+        bfs = collections.deque([self.root])
         while bfs:
-            n = bfs.pop(0)
+            n = bfs.popleft()
             order.append(n)
             if not n.is_leaf:
                 bfs.append(n.left)
@@ -335,30 +336,14 @@ class FrozenQdTree:
         Numeric ranges become [min, max+1); categorical masks keep only
         values actually present; advanced bits reflect observed truth values.
         Empty leaves get a degenerate description that intersects nothing.
+
+        Vectorized (``np.minimum.at``/``bincount``) and expressed as one
+        step of :class:`IncrementalTightener`, so streaming ingestion can
+        apply the identical update one micro-batch at a time.
         """
-        adv_truth = preds.eval_adv(records, self.cuts.adv)
-        off = self.schema.cat_offsets
-        is_cat = self.schema.is_categorical
-        for b in range(self.n_leaves):
-            sel = bids == b
-            if not sel.any():
-                self.leaf_lo[b] = 0
-                self.leaf_hi[b] = 0  # empty interval: intersects nothing
-                self.leaf_cat[b] = False
-                self.leaf_adv[b] = False
-                continue
-            rows = records[sel]
-            self.leaf_lo[b] = rows.min(axis=0)
-            self.leaf_hi[b] = rows.max(axis=0) + 1
-            cat = np.zeros_like(self.leaf_cat[b])
-            for d in np.nonzero(is_cat)[0]:
-                vals = np.unique(rows[:, d]).astype(np.int64)
-                cat[off[d] + vals] = True
-            self.leaf_cat[b] = cat
-            if self.cuts.n_adv:
-                t = adv_truth[sel]
-                self.leaf_adv[b, :, 0] = t.any(axis=0)
-                self.leaf_adv[b, :, 1] = (~t).any(axis=0)
+        t = IncrementalTightener(self)
+        t.update(records, bids)
+        t.apply()
 
     # -- serialization -------------------------------------------------------
     def save(self, path: str) -> None:
@@ -419,6 +404,63 @@ class FrozenQdTree:
             leaf_cat=z["leaf_cat"],
             leaf_adv=z["leaf_adv"],
             depth=int(z["depth"]),
+        )
+
+
+class IncrementalTightener:
+    """Streaming min-max tightening of leaf descriptions (Sec 3.2, online).
+
+    Accumulates per-leaf bounds across any number of ``update(records,
+    bids)`` micro-batches using vectorized scatter-reductions
+    (``np.minimum.at`` / ``np.maximum.at`` / ``bincount``), then ``apply()``
+    writes the tightened descriptions into the tree.  Because min, max and
+    any are associative, the result is bit-identical to one-shot
+    ``FrozenQdTree.tighten`` over the concatenated batches regardless of how
+    the stream is chunked.
+    """
+
+    def __init__(self, tree: "FrozenQdTree"):
+        self.tree = tree
+        L, d = tree.n_leaves, tree.schema.ndims
+        self.lo = np.full((L, d), np.iinfo(np.int64).max, np.int64)
+        self.hi = np.full((L, d), np.iinfo(np.int64).min, np.int64)
+        self.cat = np.zeros_like(tree.leaf_cat)
+        self.adv = np.zeros_like(tree.leaf_adv)
+        self.counts = np.zeros(L, np.int64)
+
+    def update(self, records: np.ndarray, bids: np.ndarray) -> None:
+        if records.shape[0] == 0:
+            return
+        tree = self.tree
+        bids = np.asarray(bids, np.int64)
+        rec64 = records.astype(np.int64, copy=False)
+        np.minimum.at(self.lo, bids, rec64)
+        np.maximum.at(self.hi, bids, rec64 + 1)  # hi is exclusive
+        self.counts += np.bincount(bids, minlength=self.counts.shape[0])
+        off = tree.schema.cat_offsets
+        for d in np.nonzero(tree.schema.is_categorical)[0]:
+            self.cat[bids, off[d] + rec64[:, d]] = True
+        if tree.cuts.n_adv:
+            t = preds.eval_adv(records, tree.cuts.adv)
+            np.logical_or.at(self.adv[:, :, 0], bids, t)
+            np.logical_or.at(self.adv[:, :, 1], bids, ~t)
+
+    def apply(self) -> None:
+        """Write accumulated bounds into the tree's leaf descriptions."""
+        tree = self.tree
+        nonempty = self.counts > 0
+        ne = nonempty[:, None]
+        tree.leaf_lo[:] = np.where(ne, self.lo, 0).astype(
+            tree.leaf_lo.dtype, copy=False
+        )
+        tree.leaf_hi[:] = np.where(ne, self.hi, 0).astype(
+            tree.leaf_hi.dtype, copy=False
+        )
+        tree.leaf_cat[:] = self.cat & ne
+        tree.leaf_adv[:] = self.adv & nonempty[:, None, None]
+        # invalidate description-dependent cached plans (engine/plan.py)
+        object.__setattr__(
+            tree, "_desc_version", getattr(tree, "_desc_version", 0) + 1
         )
 
 

@@ -51,24 +51,17 @@ def evaluate_layout(
     records: np.ndarray,
     workload: qry.Workload,
     tighten: bool = True,
+    backend: str = "numpy",
 ) -> SkipStats:
-    """Route ``records`` through ``tree`` and score the resulting layout."""
-    bids = tree.route(records)
-    if tighten:
-        tree.tighten(records, bids)
-    sizes = np.bincount(bids, minlength=tree.n_leaves).astype(np.int64)
-    wt = workload.tensorize(tree.cuts)
-    hits = block_query_hits(tree, wt)
-    scanned = int((hits * sizes[:, None]).sum())
-    total = records.shape[0] * len(workload)
-    return SkipStats(
-        n_records=records.shape[0],
-        n_queries=len(workload),
-        n_blocks=tree.n_leaves,
-        scanned_tuples=scanned,
-        skipped_tuples=total - scanned,
-        block_sizes=sizes,
-        query_hits=hits,
+    """Route ``records`` through ``tree`` and score the resulting layout.
+
+    Thin wrapper over ``LayoutEngine.skip_stats`` — pass ``backend`` to
+    score on the jitted/Pallas paths (bit-identical to the oracle).
+    """
+    from repro.engine import engine_for
+
+    return engine_for(tree).skip_stats(
+        records, workload, tighten=tighten, backend=backend
     )
 
 

@@ -3,17 +3,19 @@
 Three interchangeable backends, all bit-identical:
 
 * ``FrozenQdTree.route``      — numpy oracle (core/qdtree.py)
-* ``route_jax``               — jitted jnp level-synchronous descent (here)
+* engine "jax" backend        — jitted jnp level-synchronous descent
 * ``kernels.ops.route_records`` — Pallas TPU kernel (one-hot matmul descent)
 
-The jnp/Pallas paths take the tree as a pytree of arrays so the same
-compiled function serves any tree of equal static shape (n_nodes is padded
-to a bucket size to maximize jit cache hits during online ingestion).
+Backend dispatch, operand packing, and compilation caching live in the
+:mod:`repro.engine` subsystem — ``route`` below is a thin compatibility
+shim over the tree's attached :class:`~repro.engine.LayoutEngine`, whose
+plan cache pads batch/tree sizes to power-of-two buckets so online
+ingestion of varying shapes reuses jit/Pallas compilations.
+``eval_cuts_jax``/``cut_arrays`` remain here as the jnp predicate
+evaluation the engine's "jax" backend builds on.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -21,27 +23,6 @@ import numpy as np
 
 from repro.core import predicates as preds
 from repro.core.qdtree import FrozenQdTree
-
-
-def tree_arrays(tree: FrozenQdTree, pad_nodes: int | None = None) -> dict:
-    """Pack the frozen tree into jnp-friendly arrays (optionally padded)."""
-    n = tree.n_nodes
-    pad = pad_nodes or n
-    if pad < n:
-        raise ValueError("pad_nodes < n_nodes")
-
-    def _pad(x, fill):
-        out = np.full((pad,) + x.shape[1:], fill, x.dtype)
-        out[:n] = x
-        return out
-
-    return {
-        "cut_id": jnp.asarray(_pad(tree.cut_id, -1)),
-        "left": jnp.asarray(_pad(tree.left, 0)),
-        "right": jnp.asarray(_pad(tree.right, 0)),
-        "leaf_bid": jnp.asarray(_pad(tree.leaf_bid, -1)),
-        "depth": tree.depth,
-    }
 
 
 def cut_arrays(cuts: preds.CutTable) -> dict:
@@ -95,44 +76,14 @@ def _in_lookup(in_mask: jnp.ndarray, bitpos: jnp.ndarray) -> jnp.ndarray:
     return jax.vmap(per_cut, in_axes=(0, 1), out_axes=1)(in_mask, bitpos)
 
 
-@functools.partial(jax.jit, static_argnames=("depth",))
-def _route_jit(
-    records: jnp.ndarray, ta: dict, ca: dict, depth: int
-) -> jnp.ndarray:
-    M = eval_cuts_jax(records, ca)
-    m = records.shape[0]
-    node = jnp.zeros(m, jnp.int32)
-
-    def body(_, node):
-        cid = ta["cut_id"][node]
-        pred = jnp.take_along_axis(
-            M, jnp.clip(cid, 0)[:, None].astype(jnp.int32), axis=1
-        )[:, 0]
-        nxt = jnp.where(pred, ta["left"][node], ta["right"][node])
-        return jnp.where(cid >= 0, nxt, node)
-
-    node = jax.lax.fori_loop(0, depth, body, node)
-    return ta["leaf_bid"][node]
-
-
-def route_jax(tree: FrozenQdTree, records: np.ndarray) -> np.ndarray:
-    """Route a record batch on the jnp backend; returns (m,) int32 BIDs."""
-    ta = tree_arrays(tree)
-    depth = ta.pop("depth")
-    ca = cut_arrays(tree.cuts)
-    out = _route_jit(jnp.asarray(records), ta, ca, depth)
-    return np.asarray(out)
-
-
 def route(
     tree: FrozenQdTree, records: np.ndarray, backend: str = "jax"
 ) -> np.ndarray:
-    if backend == "numpy":
-        return tree.route(records)
-    if backend == "jax":
-        return route_jax(tree, records)
-    if backend == "pallas":
-        from repro.kernels import ops
+    """Route ``records`` on a registered backend (compatibility shim).
 
-        return ops.route_records(tree, records)
-    raise ValueError(f"unknown backend {backend!r}")
+    Delegates to the tree's attached :class:`~repro.engine.LayoutEngine`,
+    so repeated calls share cached compiled plans across callsites.
+    """
+    from repro.engine import engine_for
+
+    return engine_for(tree).route(records, backend=backend)

@@ -21,6 +21,80 @@ from repro.core import query as qry
 from repro.core.qdtree import FrozenQdTree
 
 
+class BlockBuffers:
+    """In-memory per-block row buffers for streaming ingestion.
+
+    ``LayoutEngine.ingest`` appends each routed micro-batch here; buffers
+    accumulate per-BID row chunks (no per-batch rewrite of persisted
+    blocks) and ``write_store`` materializes a :class:`BlockStore` once the
+    stream drains.
+    """
+
+    def __init__(self, n_blocks: int, ndims: int, dtype=None):
+        self.n_blocks = n_blocks
+        self.ndims = ndims
+        # None ⇒ adopt the first batch's dtype (no silent narrowing)
+        self._dtype = None if dtype is None else np.dtype(dtype)
+        self._chunks: list[list[np.ndarray]] = [[] for _ in range(n_blocks)]
+        self.sizes = np.zeros(n_blocks, np.int64)
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self._dtype if self._dtype is not None else np.dtype(np.int32)
+
+    @staticmethod
+    def for_tree(tree: FrozenQdTree, dtype=None) -> "BlockBuffers":
+        return BlockBuffers(tree.n_leaves, tree.schema.ndims, dtype)
+
+    def append(self, records: np.ndarray, bids: np.ndarray) -> None:
+        """Scatter one routed batch into the per-block buffers."""
+        if records.shape[0] == 0:
+            return
+        if self._dtype is None:
+            self._dtype = records.dtype
+        order = np.argsort(bids, kind="stable")
+        sorted_recs = records[order].astype(self.dtype, copy=False)
+        counts = np.bincount(bids, minlength=self.n_blocks)
+        bounds = np.concatenate([[0], np.cumsum(counts)])
+        for b in np.nonzero(counts)[0]:
+            self._chunks[b].append(sorted_recs[bounds[b] : bounds[b + 1]])
+        self.sizes += counts
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.sizes.sum())
+
+    def block(self, bid: int) -> np.ndarray:
+        chunks = self._chunks[bid]
+        if not chunks:
+            return np.zeros((0, self.ndims), self.dtype)
+        return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+
+    def write_store(
+        self, path: str | pathlib.Path, tree: FrozenQdTree
+    ) -> "BlockStore":
+        """Persist the buffered blocks as a BlockStore (npz + manifest)."""
+        root = pathlib.Path(path)
+        root.mkdir(parents=True, exist_ok=True)
+        row_bytes = self.ndims * self.dtype.itemsize
+        for b in range(self.n_blocks):
+            np.savez(root / f"block_{b:06d}.npz", rows=self.block(b))
+        tree.save(str(root / "qdtree.npz"))
+        manifest = {
+            "n_blocks": int(self.n_blocks),
+            "sizes": self.sizes.tolist(),
+            "row_bytes": row_bytes,
+            "n_rows": self.n_rows,
+        }
+        (root / "manifest.json").write_text(json.dumps(manifest))
+        return BlockStore(
+            root=root,
+            tree=tree,
+            sizes=self.sizes.copy(),
+            row_bytes=row_bytes,
+        )
+
+
 @dataclasses.dataclass
 class ScanResult:
     rows: np.ndarray  # exact matching records
@@ -46,34 +120,36 @@ class BlockStore:
         records: np.ndarray,
         backend: str = "numpy",
     ) -> "BlockStore":
-        """Route all records and persist one npz per block."""
-        from repro.core import routing
+        """Route all records and persist one npz per block.
 
-        root = pathlib.Path(path)
-        root.mkdir(parents=True, exist_ok=True)
-        bids = routing.route(tree, records, backend=backend)
-        tree.tighten(records, bids)
-        sizes = np.bincount(bids, minlength=tree.n_leaves)
-        order = np.argsort(bids, kind="stable")
-        sorted_recs = records[order]
-        bounds = np.concatenate([[0], np.cumsum(sizes)])
-        row_bytes = records.shape[1] * records.dtype.itemsize
-        for b in range(tree.n_leaves):
-            np.savez(
-                root / f"block_{b:06d}.npz",
-                rows=sorted_recs[bounds[b] : bounds[b + 1]],
-            )
-        tree.save(str(root / "qdtree.npz"))
-        manifest = {
-            "n_blocks": int(tree.n_leaves),
-            "sizes": sizes.tolist(),
-            "row_bytes": row_bytes,
-            "n_rows": int(records.shape[0]),
-        }
-        (root / "manifest.json").write_text(json.dumps(manifest))
-        return BlockStore(
-            root=root, tree=tree, sizes=sizes, row_bytes=row_bytes
+        One-shot convenience over the streaming path: a single ``ingest``
+        batch through the tree's LayoutEngine.
+        """
+        return BlockStore.create_streaming(
+            path, tree, [records], backend=backend,
+            dtype=records.dtype,
         )
+
+    @staticmethod
+    def create_streaming(
+        path: str | pathlib.Path,
+        tree: FrozenQdTree,
+        batches,
+        backend: str = "numpy",
+        dtype=None,
+    ) -> "BlockStore":
+        """Ingest a stream of record micro-batches into a new store.
+
+        Routes each batch through the LayoutEngine, buffers rows per block,
+        incrementally tightens leaf descriptions, then persists.
+        """
+        from repro.engine import engine_for
+
+        buffers = BlockBuffers(tree.n_leaves, tree.schema.ndims, dtype)
+        engine_for(tree).ingest(
+            batches, tighten=True, buffers=buffers, backend=backend
+        )
+        return buffers.write_store(path, tree)
 
     @staticmethod
     def open(path: str | pathlib.Path) -> "BlockStore":
@@ -86,6 +162,14 @@ class BlockStore:
             sizes=np.asarray(manifest["sizes"], np.int64),
             row_bytes=int(manifest["row_bytes"]),
         )
+
+    # -- engine access -------------------------------------------------------
+    @property
+    def engine(self):
+        """The store's LayoutEngine (shared plan cache via the tree)."""
+        from repro.engine import engine_for
+
+        return engine_for(self.tree)
 
     # -- reads ---------------------------------------------------------------
     def read_block(self, bid: int) -> np.ndarray:
@@ -106,7 +190,7 @@ class BlockStore:
         touch counts.
         """
         t0 = time.perf_counter()
-        bids = qry.route_query(self.tree, query)
+        bids = self.engine.route_query(query)
         rows_out = []
         bytes_read = 0
         rows_scanned = 0

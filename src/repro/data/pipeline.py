@@ -179,7 +179,7 @@ class QdTreePipeline:
         self.cfg = cfg
         self.worker = worker
         if cfg.curation_query is not None:
-            bids = qry.route_query(store.tree, cfg.curation_query)
+            bids = store.engine.route_query(cfg.curation_query)
             self.block_ids = [int(b) for b in bids]
         else:
             self.block_ids = list(range(store.tree.n_leaves))

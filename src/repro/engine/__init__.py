@@ -1,0 +1,27 @@
+"""LayoutEngine subsystem: one backend-dispatched routing/query API.
+
+Public surface:
+  LayoutEngine   — route / query_hits / skip_stats / ingest over a frozen tree
+  engine_for     — the per-tree attached engine (shared plan cache)
+  register_backend / get_backend / available_backends — backend registry
+  PlanCache / pad_bucket / trace_counts — compiled-plan cache + counters
+"""
+
+from repro.engine.backends import (  # noqa: F401
+    Backend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.engine.engine import (  # noqa: F401
+    IngestReport,
+    LayoutEngine,
+    engine_for,
+)
+from repro.engine.plan import (  # noqa: F401
+    CompiledPlan,
+    PlanCache,
+    PlanKey,
+    pad_bucket,
+    trace_counts,
+)

@@ -1,0 +1,367 @@
+"""Routing/intersection backends for the LayoutEngine.
+
+Each backend registers itself under a name (replacing the stringly-typed
+``routing.route(..., backend=...)`` dispatch) and implements the same two
+operations against a ``FrozenQdTree``:
+
+  * ``route(tree, cache, records)``      — record batch → BIDs (int32)
+  * ``query_hits(tree, cache, wt)``      — (n_leaves, n_queries) bool
+
+All backends are bit-identical to the numpy oracles in ``repro.core``; the
+jitted jnp and Pallas paths additionally pull their packed operands from the
+engine's :class:`~repro.engine.plan.PlanCache`, so same-bucket batches reuse
+compilations (zero retracing — asserted via ``plan.trace_counts``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as qry
+from repro.core.qdtree import FrozenQdTree
+from repro.engine import plan as planlib
+from repro.engine.plan import (
+    LANE,
+    CompiledPlan,
+    PlanCache,
+    PlanKey,
+    count_trace,
+    interpret_default,
+    pad_bucket,
+)
+
+_REGISTRY: dict[str, "Backend"] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: instantiate and register a backend under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> "Backend":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+class Backend:
+    """Interface: route records and intersect queries for one frozen tree."""
+
+    name: str = "?"
+
+    def route(
+        self,
+        tree: FrozenQdTree,
+        cache: PlanCache,
+        records: np.ndarray,
+        **opts,
+    ) -> np.ndarray:
+        raise NotImplementedError
+
+    def query_hits(
+        self,
+        tree: FrozenQdTree,
+        cache: PlanCache,
+        wt: qry.WorkloadTensors,
+        **opts,
+    ) -> np.ndarray:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle
+# ---------------------------------------------------------------------------
+@register_backend("numpy")
+class NumpyBackend(Backend):
+    def route(self, tree, cache, records, **opts):
+        return tree.route(records)
+
+    def query_hits(self, tree, cache, wt, **opts):
+        conj = qry.conjuncts_intersect(
+            tree.leaf_lo, tree.leaf_hi, tree.leaf_cat, tree.leaf_adv, wt,
+            tree.schema,
+        )
+        return qry.queries_intersect(conj, wt)
+
+
+# ---------------------------------------------------------------------------
+# jitted jnp level-synchronous descent
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _route_jax_padded(records, ta, ca, depth):
+    count_trace("route:jax")
+    from repro.core.routing import eval_cuts_jax
+
+    M = eval_cuts_jax(records, ca)
+    m = records.shape[0]
+    node = jnp.zeros(m, jnp.int32)
+
+    def body(_, node):
+        cid = ta["cut_id"][node]
+        pred = jnp.take_along_axis(
+            M, jnp.clip(cid, 0)[:, None].astype(jnp.int32), axis=1
+        )[:, 0]
+        nxt = jnp.where(pred, ta["left"][node], ta["right"][node])
+        return jnp.where(cid >= 0, nxt, node)
+
+    node = jax.lax.fori_loop(0, depth, body, node)
+    return ta["leaf_bid"][node]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("numeric_dims", "cat_segments", "n_adv")
+)
+def _conj_intersect_jax(leaf, q, numeric_dims, cat_segments, n_adv):
+    count_trace("query:jax")
+    lo = jnp.maximum(leaf["leaf_lo"][:, None, :], q["q_lo"][None, :, :])
+    hi = jnp.minimum(leaf["leaf_hi"][:, None, :], q["q_hi"][None, :, :])
+    boxes = lo < hi  # (L, C, D)
+    shape = boxes.shape[:2]
+    if numeric_dims:
+        box_ok = boxes[:, :, jnp.asarray(numeric_dims)].all(axis=2)
+    else:
+        box_ok = jnp.ones(shape, bool)
+    cat_ok = jnp.ones(shape, bool)
+    for s, e in cat_segments:
+        cat_ok &= (
+            leaf["leaf_cat"][:, None, s:e] & q["q_cat"][None, :, s:e]
+        ).any(axis=2)
+    adv_ok = jnp.ones(shape, bool)
+    if n_adv:
+        req = q["q_adv"][:, :n_adv]  # (C, A)
+        may_t = leaf["leaf_adv"][:, :, 0]  # (L, A)
+        may_f = leaf["leaf_adv"][:, :, 1]
+        ok = ~((req == qry.ADV_TRUE)[None, :, :] & ~may_t[:, None, :])
+        ok &= ~((req == qry.ADV_FALSE)[None, :, :] & ~may_f[:, None, :])
+        adv_ok = ok.all(axis=2)
+    return box_ok & cat_ok & adv_ok
+
+
+def _padded_workload_tensors(wt: qry.WorkloadTensors) -> dict:
+    """Conjunct tensors padded to their bucket, device-resident.
+
+    Cached on the (immutable) WorkloadTensors object itself, so scoring
+    loops reuse the upload instead of re-padding and re-transferring.
+    """
+    cached = getattr(wt, "_jax_padded", None)
+    if cached is not None:
+        return cached
+    nc = wt.n_conjuncts
+    c_bucket = pad_bucket(nc, 8)
+
+    def _padq(x, fill):
+        out = np.full((c_bucket,) + x.shape[1:], fill, x.dtype)
+        out[:nc] = x
+        return out
+
+    q = {
+        "q_lo": jnp.asarray(_padq(wt.q_lo, 0)),
+        "q_hi": jnp.asarray(_padq(wt.q_hi, 0)),  # empty box ⇒ no hit
+        "q_cat": jnp.asarray(_padq(wt.q_cat, False)),
+        "q_adv": jnp.asarray(_padq(wt.q_adv, 0)),
+    }
+    object.__setattr__(wt, "_jax_padded", q)
+    return q
+
+
+@register_backend("jax")
+class JaxBackend(Backend):
+    min_batch_bucket = 64
+
+    def _route_plan(self, tree, cache):
+        sig = planlib.tree_signature(tree)
+        node_bucket = pad_bucket(tree.n_nodes, 16)
+        cut_bucket = pad_bucket(tree.cuts.n_cuts, 16)
+        depth_bucket = pad_bucket(tree.depth, 1)
+        key = PlanKey(
+            sig, "jax", 0, node_bucket, 0, cut_bucket, ("route", depth_bucket)
+        )
+
+        def build():
+            ta = {
+                k: jnp.asarray(v)
+                for k, v in planlib.pack_tree_arrays(tree, node_bucket).items()
+            }
+            ca = {
+                k: jnp.asarray(v)
+                for k, v in planlib.pack_cut_arrays(tree, cut_bucket).items()
+            }
+            fn = functools.partial(
+                _route_jax_padded, ta=ta, ca=ca, depth=depth_bucket
+            )
+            return CompiledPlan(key=key, fn=fn, operands={"ta": ta, "ca": ca},
+                                meta={"depth": depth_bucket})
+
+        return cache.get(key, build)
+
+    def route(self, tree, cache, records, **opts):
+        plan = self._route_plan(tree, cache)
+        m = records.shape[0]
+        m_bucket = pad_bucket(m, self.min_batch_bucket)
+        padded = np.zeros((m_bucket, records.shape[1]), np.int32)
+        padded[:m] = records
+        out = plan.fn(jnp.asarray(padded))
+        return np.asarray(out[:m]).astype(np.int32)
+
+    def query_hits(self, tree, cache, wt, **opts):
+        sig = planlib.tree_signature(tree)
+        L = tree.n_leaves
+        leaf_bucket = pad_bucket(L, 8)
+        version = planlib.desc_version(tree)
+        key = PlanKey(sig, "jax", 0, 0, leaf_bucket, 0, ("query", version))
+
+        def build():
+            schema = tree.schema
+            leaf = {
+                k: jnp.asarray(v)
+                for k, v in planlib.pack_leaf_descs(tree, leaf_bucket).items()
+            }
+            off = schema.cat_offsets
+            meta = {
+                "numeric_dims": tuple(
+                    int(i) for i in np.nonzero(~schema.is_categorical)[0]
+                ),
+                "cat_segments": tuple(
+                    (int(off[d]), int(off[d]) + schema.columns[d].dom)
+                    for d in np.nonzero(schema.is_categorical)[0]
+                ),
+            }
+            # tighten superseded any older leaf-description plan — drop it
+            # so long-lived ingest/score loops don't accumulate device copies
+            cache.evict(
+                lambda k: (
+                    isinstance(k, PlanKey)
+                    and k.sig == sig
+                    and k.opts[:1] == ("query",)
+                    and k.opts != ("query", version)
+                )
+            )
+            return CompiledPlan(key=key, fn=None, operands=leaf, meta=meta)
+
+        plan = cache.get(key, build)
+        q = _padded_workload_tensors(wt)
+        conj = _conj_intersect_jax(
+            plan.operands, q,
+            numeric_dims=plan.meta["numeric_dims"],
+            cat_segments=plan.meta["cat_segments"],
+            n_adv=tree.leaf_adv.shape[1],
+        )
+        conj_hits = np.asarray(conj)[:L, : wt.n_conjuncts]
+        return qry.queries_intersect(conj_hits, wt)
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU kernels (interpret mode off-TPU)
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_m", "tile_l", "n_cat_bits", "n_adv", "interpret"),
+)
+def _route_pallas_padded(
+    records_f32, k, *, tile_m, tile_l, n_cat_bits, n_adv, interpret
+):
+    count_trace("route:pallas")
+    from repro.kernels import route_records as rk
+
+    m_mat = rk.eval_cuts_pallas(
+        records_f32,
+        k["dim_onehot"],
+        k["cutpoint"],
+        k["in_mask_t"],
+        k["is_cat"],
+        k["cat_off"],
+        k["adv_cols"],
+        k["adv_sel"],
+        k["kind"],
+        tile_m=tile_m,
+        n_cat_bits=n_cat_bits,
+        n_adv=n_adv,
+        interpret=interpret,
+    )
+    return rk.locate_leaf_pallas(
+        m_mat,
+        k["pathpos"],
+        k["pathneg"],
+        k["leafid"],
+        tile_m=tile_m,
+        tile_l=tile_l,
+        interpret=interpret,
+    )
+
+
+@register_backend("pallas")
+class PallasBackend(Backend):
+    min_batch_bucket = 256
+
+    def _route_plan(self, tree, cache, tile_m, tile_l, interpret):
+        sig = planlib.tree_signature(tree)
+        cut_bucket = pad_bucket(tree.cuts.n_cuts, LANE)
+        leaf_bucket = pad_bucket(tree.n_leaves, LANE)
+        tile_l = min(tile_l, leaf_bucket)
+        key = PlanKey(
+            sig, "pallas", 0, 0, leaf_bucket, cut_bucket,
+            ("route", tile_m, tile_l, interpret),
+        )
+
+        def build():
+            packed = planlib.pack_route_constants(
+                tree, cut_bucket, leaf_bucket
+            )
+            meta = {
+                "n_adv": packed.pop("n_adv"),
+                "n_cat_bits": packed.pop("n_cat_bits"),
+                "tile_l": tile_l,
+            }
+            operands = {kk: jnp.asarray(v) for kk, v in packed.items()}
+            fn = functools.partial(
+                _route_pallas_padded,
+                k=operands,
+                tile_m=tile_m,
+                tile_l=tile_l,
+                n_cat_bits=meta["n_cat_bits"],
+                n_adv=meta["n_adv"],
+                interpret=interpret,
+            )
+            return CompiledPlan(key=key, fn=fn, operands=operands, meta=meta)
+
+        return cache.get(key, build)
+
+    def route(
+        self, tree, cache, records, tile_m: int = 256, tile_l: int = LANE,
+        interpret: bool | None = None, **opts,
+    ):
+        if interpret is None:
+            interpret = interpret_default()
+        plan = self._route_plan(tree, cache, tile_m, tile_l, interpret)
+        m = records.shape[0]
+        m_bucket = pad_bucket(m, max(self.min_batch_bucket, tile_m))
+        if m_bucket % tile_m:  # non-power-of-two tile_m
+            m_bucket = ((m_bucket + tile_m - 1) // tile_m) * tile_m
+        padded = np.zeros((m_bucket, records.shape[1]), np.float32)
+        padded[:m] = records
+        bids = plan.fn(jnp.asarray(padded))
+        return np.asarray(bids[:m]).astype(np.int32)
+
+    def query_hits(self, tree, cache, wt, interpret: bool | None = None,
+                   **opts):
+        from repro.kernels import ops
+
+        hits, _ = ops.query_intersect(tree, wt, interpret=interpret)
+        return hits

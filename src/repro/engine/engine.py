@@ -1,0 +1,230 @@
+"""LayoutEngine: the single serving interface over a frozen qd-tree.
+
+Consolidates the routing backends (core/routing.py), the Pallas operand
+packing (kernels/ops.py), query↔block intersection (core/rewards.py) and
+streaming ingestion into block buffers (data/blocks.py) behind one object:
+
+    eng = LayoutEngine(frozen_tree, backend="jax")
+    bids = eng.route(records)                   # any registered backend
+    hits = eng.query_hits(workload)             # (n_leaves, n_queries) bool
+    stats = eng.skip_stats(records, workload)   # paper Eq. 1 metrics
+    report = eng.ingest(batch_iter)             # online micro-batch ingestion
+
+All backends are bit-identical; compiled plans (jit/Pallas executables plus
+their packed operands) are cached per power-of-two padding bucket so online
+ingestion of varying batch sizes never retraces (``eng.stats()`` exposes the
+plan-cache and trace counters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Iterator, Optional
+
+import numpy as np
+
+from repro.core import query as qry
+from repro.core.qdtree import FrozenQdTree, IncrementalTightener
+from repro.engine import backends as be
+from repro.engine import plan as planlib
+from repro.engine.plan import PlanCache
+
+
+@dataclasses.dataclass
+class IngestReport:
+    """Summary of one streaming-ingestion run."""
+
+    n_batches: int
+    n_records: int
+    block_sizes: np.ndarray  # (n_leaves,) records routed per block
+    wall_s: float
+    backend: str
+    plan_cache: dict  # hits/misses/size snapshot
+    traces: dict  # trace-counter deltas during the run
+
+    @property
+    def records_per_s(self) -> float:
+        return self.n_records / self.wall_s if self.wall_s else 0.0
+
+
+class LayoutEngine:
+    """Backend-dispatched routing/query API with a compiled-plan cache."""
+
+    def __init__(
+        self,
+        tree: FrozenQdTree,
+        backend: str = "jax",
+        interpret: Optional[bool] = None,
+        plan_cache: Optional[PlanCache] = None,
+    ):
+        be.get_backend(backend)  # validate eagerly
+        self.tree = tree
+        self.backend = backend
+        self.interpret = interpret
+        self.plans = plan_cache if plan_cache is not None else PlanCache()
+        # keeps a strong reference to the workload alongside its tensors:
+        # id() keys are only stable while the object is alive
+        self._wt_cache: dict[
+            int, tuple[qry.Workload, qry.WorkloadTensors]
+        ] = {}
+
+    # -- dispatch -----------------------------------------------------------
+    def _backend(self, override: Optional[str]) -> be.Backend:
+        return be.get_backend(override or self.backend)
+
+    def _opts(self) -> dict:
+        return {} if self.interpret is None else {"interpret": self.interpret}
+
+    # -- routing ------------------------------------------------------------
+    def route(
+        self, records: np.ndarray, backend: Optional[str] = None, **opts
+    ) -> np.ndarray:
+        """Record batch → (m,) int32 BIDs (paper Sec 3.1)."""
+        if records.shape[0] == 0:
+            return np.zeros(0, np.int32)
+        kw = {**self._opts(), **opts}
+        return self._backend(backend).route(
+            self.tree, self.plans, records, **kw
+        )
+
+    # -- query processing ---------------------------------------------------
+    def _tensorize(self, workload: qry.Workload) -> qry.WorkloadTensors:
+        hit = self._wt_cache.get(id(workload))
+        if hit is not None and hit[0] is workload:
+            return hit[1]
+        wt = workload.tensorize(self.tree.cuts)
+        if len(self._wt_cache) >= 16:  # bound memory for workload churn
+            self._wt_cache.clear()
+        self._wt_cache[id(workload)] = (workload, wt)
+        return wt
+
+    def query_hits(
+        self,
+        workload: qry.Workload | qry.WorkloadTensors,
+        backend: Optional[str] = None,
+        **opts,
+    ) -> np.ndarray:
+        """(n_leaves, n_queries) bool — blocks each query must scan."""
+        wt = (
+            workload
+            if isinstance(workload, qry.WorkloadTensors)
+            else self._tensorize(workload)
+        )
+        kw = {**self._opts(), **opts}
+        return self._backend(backend).query_hits(
+            self.tree, self.plans, wt, **kw
+        )
+
+    def route_query(self, query: qry.Query) -> np.ndarray:
+        """BID IN (...) list for one query (paper Sec 3.3)."""
+        wl = qry.Workload(self.tree.schema, (query,))
+        hits = self.query_hits(wl.tensorize(self.tree.cuts), backend="numpy")
+        return np.nonzero(hits[:, 0])[0].astype(np.int32)
+
+    def skip_stats(
+        self,
+        records: np.ndarray,
+        workload: qry.Workload,
+        tighten: bool = True,
+        backend: Optional[str] = None,
+    ):
+        """Route + (optionally) tighten + score: paper Eq. 1 SkipStats."""
+        from repro.core import rewards
+
+        bids = self.route(records, backend=backend)
+        if tighten:
+            self.tree.tighten(records, bids)
+        sizes = np.bincount(bids, minlength=self.tree.n_leaves).astype(
+            np.int64
+        )
+        hits = self.query_hits(workload, backend=backend)
+        scanned = int((hits * sizes[:, None]).sum())
+        total = records.shape[0] * len(workload)
+        return rewards.SkipStats(
+            n_records=records.shape[0],
+            n_queries=len(workload),
+            n_blocks=self.tree.n_leaves,
+            scanned_tuples=scanned,
+            skipped_tuples=total - scanned,
+            block_sizes=sizes,
+            query_hits=hits,
+        )
+
+    # -- streaming ingestion -------------------------------------------------
+    def ingest(
+        self,
+        batches: Iterable[np.ndarray] | Iterator[np.ndarray],
+        tighten: bool = True,
+        buffers=None,  # data.blocks.BlockBuffers | None
+        backend: Optional[str] = None,
+    ) -> IngestReport:
+        """Route arriving micro-batches and fold them into the layout.
+
+        Per batch: route → append to ``buffers`` (if given) → incrementally
+        min-max-tighten leaf descriptions.  The incremental tightener is
+        exactly equivalent to one-shot ``FrozenQdTree.tighten`` over the
+        concatenation of all batches (min/max/any are associative).
+        """
+        traces0 = planlib.trace_counts()
+        tightener = IncrementalTightener(self.tree) if tighten else None
+        # the tightener already keeps per-leaf counts; only maintain a
+        # separate accumulator when there is no tightener to read back
+        sizes = None if tighten else np.zeros(self.tree.n_leaves, np.int64)
+        n_batches = n_records = 0
+        t0 = time.perf_counter()
+        for batch in batches:
+            if batch.shape[0] == 0:
+                continue
+            bids = self.route(batch, backend=backend)
+            if buffers is not None:
+                buffers.append(batch, bids)
+            if tightener is not None:
+                tightener.update(batch, bids)
+            else:
+                sizes += np.bincount(bids, minlength=sizes.shape[0])
+            n_batches += 1
+            n_records += batch.shape[0]
+        if tightener is not None:
+            tightener.apply()
+            sizes = tightener.counts.copy()
+        wall = time.perf_counter() - t0
+        traces1 = planlib.trace_counts()
+        delta = {
+            k: traces1.get(k, 0) - traces0.get(k, 0)
+            for k in set(traces0) | set(traces1)
+            if traces1.get(k, 0) != traces0.get(k, 0)
+        }
+        return IngestReport(
+            n_batches=n_batches,
+            n_records=n_records,
+            block_sizes=sizes,
+            wall_s=wall,
+            backend=backend or self.backend,
+            plan_cache=self.plans.stats(),
+            traces=delta,
+        )
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "backend": self.backend,
+            "plan_cache": self.plans.stats(),
+            "traces": planlib.trace_counts(),
+        }
+
+
+def engine_for(
+    tree: FrozenQdTree, backend: str = "jax", **kw
+) -> LayoutEngine:
+    """The tree's attached engine (created on first use).
+
+    Attaching keeps the plan cache alive across the legacy free-function
+    callsites (``routing.route``, ``BlockStore.create``, benchmarks) without
+    threading an engine object through every signature.
+    """
+    eng = getattr(tree, "_layout_engine", None)
+    if eng is None:
+        eng = LayoutEngine(tree, backend=backend, **kw)
+        object.__setattr__(tree, "_layout_engine", eng)
+    return eng

@@ -1,28 +1,23 @@
 """Jit'd wrappers around the Pallas kernels.
 
-Responsibilities: build the dense kernel operands from a ``FrozenQdTree`` +
-workload tensors (host-side, cached per tree), pad every axis to MXU-aligned
-tile multiples, pick ``interpret=True`` automatically off-TPU, and slice the
-padding back off.  Everything returned is numpy and bit-identical to the
-numpy oracles in ``repro.core``.
+Dense kernel operands are packed and cached by the LayoutEngine's plan
+cache (``repro.engine.plan``); this module keeps the kernel-level entry
+points — padding every axis to MXU-aligned tile multiples, picking
+``interpret=True`` automatically off-TPU, and slicing the padding back
+off.  Everything returned is numpy and bit-identical to the numpy oracles
+in ``repro.core``.
 """
 
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import query as qry
 from repro.core.qdtree import FrozenQdTree
-from repro.kernels import route_records as rk
+from repro.engine.plan import LANE  # noqa: F401 — one authoritative value
+from repro.engine.plan import interpret_default as _interpret_default
 from repro.kernels import query_intersect as qk
-
-LANE = 128  # TPU lane width; last-dim tiles should be multiples of this
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: np.ndarray, axis: int, mult: int, fill=0) -> np.ndarray:
@@ -36,93 +31,9 @@ def _pad_to(x: np.ndarray, axis: int, mult: int, fill=0) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Routing
+# Routing — operand packing (engine/plan.py: pack_route_constants,
+# path_matrices) and plan caching live in repro.engine.
 # ---------------------------------------------------------------------------
-def path_matrices(tree: FrozenQdTree) -> tuple[np.ndarray, np.ndarray]:
-    """PathPos/PathNeg (n_cuts, n_leaves): leaf path constraints."""
-    n_cuts = tree.cuts.n_cuts
-    pos = np.zeros((n_cuts, tree.n_leaves), np.float32)
-    neg = np.zeros((n_cuts, tree.n_leaves), np.float32)
-    stack: list[tuple[int, list[tuple[int, bool]]]] = [(0, [])]
-    while stack:
-        node, cons = stack.pop()
-        bid = int(tree.leaf_bid[node])
-        if bid >= 0:
-            for c, d in cons:
-                (pos if d else neg)[c, bid] = 1.0
-        else:
-            c = int(tree.cut_id[node])
-            stack.append((int(tree.left[node]), cons + [(c, True)]))
-            stack.append((int(tree.right[node]), cons + [(c, False)]))
-    return pos, neg
-
-
-def route_constants(tree: FrozenQdTree) -> dict:
-    """Kernel operands derived from the frozen tree (cached on the tree)."""
-    cached = getattr(tree, "_route_consts", None)
-    if cached is not None:
-        return cached
-    cuts, schema = tree.cuts, tree.schema
-    d = schema.ndims
-    c_pad = max(((cuts.n_cuts + LANE - 1) // LANE) * LANE, LANE)
-    dim_onehot = np.zeros((d, c_pad), np.float32)
-    valid = np.arange(cuts.n_cuts)
-    dim_onehot[np.maximum(cuts.dim, 0), valid] = (
-        cuts.kind != 2
-    ).astype(np.float32)[valid]
-    cutpoint = np.zeros((1, c_pad), np.float32)
-    cutpoint[0, : cuts.n_cuts] = cuts.cutpoint
-    bits = max(schema.total_cat_bits, 1)
-    b_pad = max(((bits + LANE - 1) // LANE) * LANE, LANE)
-    in_mask_t = np.zeros((b_pad, c_pad), np.float32)
-    in_mask_t[: cuts.in_mask.shape[1], : cuts.n_cuts] = (
-        cuts.in_mask.T.astype(np.float32)
-    )
-    is_cat = schema.is_categorical.astype(np.float32)[None, :]
-    cat_off = np.maximum(schema.cat_offsets, 0).astype(np.float32)[None, :]
-    n_adv = cuts.n_adv
-    a3 = max(n_adv, 1)
-    adv_cols = np.zeros((a3, 3), np.float32)
-    adv_sel = np.zeros((a3, c_pad), np.float32)
-    for j, a in enumerate(cuts.adv):
-        adv_cols[j] = (a.col_a, a.op, a.col_b)
-    advc = np.nonzero(cuts.kind == 2)[0]
-    adv_sel[cuts.adv_id[advc], advc] = 1.0
-    kind = np.zeros((1, c_pad), np.float32)
-    kind[0, : cuts.n_cuts] = cuts.kind
-
-    pos, neg = path_matrices(tree)
-    pos = np.pad(pos, ((0, c_pad - pos.shape[0]), (0, 0)))
-    neg = np.pad(neg, ((0, c_pad - neg.shape[0]), (0, 0)))
-    l_pad = max(((tree.n_leaves + LANE - 1) // LANE) * LANE, LANE)
-    leafid = np.zeros((1, l_pad), np.float32)
-    leafid[0, : tree.n_leaves] = np.arange(tree.n_leaves) + 1.0
-    pos = _pad_to(pos, 1, LANE)
-    neg = _pad_to(neg, 1, LANE)
-    # padded leaf columns must always register ≥1 violation: require cut 0
-    # both true and false
-    pos[0, tree.n_leaves :] = 1.0
-    neg[0, tree.n_leaves :] = 1.0
-
-    consts = dict(
-        dim_onehot=dim_onehot,
-        cutpoint=cutpoint,
-        in_mask_t=in_mask_t,
-        is_cat=is_cat,
-        cat_off=cat_off,
-        adv_cols=adv_cols,
-        adv_sel=adv_sel,
-        kind=kind,
-        pathpos=pos,
-        pathneg=neg,
-        leafid=leafid,
-        n_adv=n_adv,
-        n_cat_bits=b_pad,
-    )
-    object.__setattr__(tree, "_route_consts", consts)
-    return consts
-
-
 def route_records(
     tree: FrozenQdTree,
     records: np.ndarray,
@@ -130,38 +41,20 @@ def route_records(
     tile_l: int = LANE,
     interpret: bool | None = None,
 ) -> np.ndarray:
-    """Record → BID via the Pallas path (paper Sec 3.1)."""
-    if interpret is None:
-        interpret = _interpret_default()
-    k = route_constants(tree)
-    m = records.shape[0]
-    rec = _pad_to(records.astype(np.float32), 0, tile_m)
-    m_mat = rk.eval_cuts_pallas(
-        jnp.asarray(rec),
-        jnp.asarray(k["dim_onehot"]),
-        jnp.asarray(k["cutpoint"]),
-        jnp.asarray(k["in_mask_t"]),
-        jnp.asarray(k["is_cat"]),
-        jnp.asarray(k["cat_off"]),
-        jnp.asarray(k["adv_cols"]),
-        jnp.asarray(k["adv_sel"]),
-        jnp.asarray(k["kind"]),
-        tile_m=tile_m,
-        n_cat_bits=k["n_cat_bits"],
-        n_adv=k["n_adv"],
-        interpret=interpret,
-    )
-    tile_l = min(tile_l, k["pathpos"].shape[1])
-    bids = rk.locate_leaf_pallas(
-        m_mat,
-        jnp.asarray(k["pathpos"]),
-        jnp.asarray(k["pathneg"]),
-        jnp.asarray(k["leafid"]),
+    """Record → BID via the Pallas path (paper Sec 3.1).
+
+    Dispatches through the tree's attached LayoutEngine so the packed
+    operands and the compiled kernel pair are cached per padding bucket.
+    """
+    from repro.engine import engine_for
+
+    return engine_for(tree).route(
+        records,
+        backend="pallas",
         tile_m=tile_m,
         tile_l=tile_l,
         interpret=interpret,
     )
-    return np.asarray(bids[:m]).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

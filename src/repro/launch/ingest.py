@@ -1,0 +1,143 @@
+"""Sustained online ingestion through the LayoutEngine.
+
+Demonstrates the layout engine as a long-lived service (ROADMAP north star;
+cf. the dynamic-layout follow-up work): records arrive as micro-batches of
+*varying* sizes, each batch is routed on a compiled backend, appended to
+per-block buffers, and leaf descriptions are tightened incrementally — all
+without retracing, thanks to the power-of-two plan-cache buckets.
+
+    PYTHONPATH=src python -m repro.launch.ingest \
+        --rows 60000 --batch 2048 --backend jax --workload tpch \
+        --store /tmp/qd_store
+
+Prints per-phase throughput plus the engine's plan-cache/trace counters and
+(optionally) persists the ingested blocks as a BlockStore.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import greedy
+from repro.data import datagen, workload as wl
+from repro.data.blocks import BlockBuffers
+from repro.engine import LayoutEngine, pad_bucket, trace_counts
+
+
+def make_workload(name: str, rows: int, seed: int):
+    if name == "tpch":
+        schema, records = datagen.make_tpch_like(rows, seed=seed)
+        work, _ = wl.make_tpch_workload(schema, n_per_template=5, seed=seed)
+        cuts = work.candidate_cuts(max_adv=4)
+    elif name == "errorlog_int":
+        schema, records = datagen.make_errorlog_int(rows, seed=seed)
+        work, _ = wl.make_errorlog_int_workload(
+            schema, n_queries=100, seed=seed
+        )
+        cuts = work.candidate_cuts()
+    else:
+        raise SystemExit(f"unknown workload {name!r}")
+    return schema, records, work, cuts
+
+
+def batch_sizes(n_rows: int, mean_batch: int, seed: int) -> list[int]:
+    """Arrival-like batch sizes with ±50% jitter (plus the tail remainder)."""
+    rng = np.random.default_rng(seed)
+    sizes: list[int] = []
+    left = n_rows
+    while left > 0:
+        b = int(rng.integers(max(mean_batch // 2, 1), mean_batch * 3 // 2))
+        sizes.append(min(b, left))
+        left -= sizes[-1]
+    return sizes
+
+
+def micro_batches(records: np.ndarray, sizes: list[int]):
+    i = 0
+    for b in sizes:
+        yield records[i : i + b]
+        i += b
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=60_000)
+    ap.add_argument("--batch", type=int, default=2048,
+                    help="mean micro-batch size (sizes jitter ±50%%)")
+    ap.add_argument("--backend", default="jax",
+                    choices=("numpy", "jax", "pallas"))
+    ap.add_argument("--workload", default="tpch")
+    ap.add_argument("--min-block", type=int, default=600)
+    ap.add_argument("--store", default=None,
+                    help="optional path to persist the ingested BlockStore")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    schema, records, work, cuts = make_workload(
+        args.workload, args.rows, args.seed
+    )
+    # build the layout on a bootstrap sample, then stream the full corpus in
+    sample = records[: max(args.rows // 10, 1000)]
+    sample_min_block = max(
+        args.min_block * sample.shape[0] // max(args.rows, 1), 50
+    )
+    t0 = time.perf_counter()
+    tree = greedy.build_greedy(
+        sample, work, cuts, greedy.GreedyConfig(min_block=sample_min_block)
+    )
+    frozen = tree.freeze()
+    build_s = time.perf_counter() - t0
+    print(
+        f"[ingest] built qd-tree on {sample.shape[0]} bootstrap rows in "
+        f"{build_s:.2f}s ({frozen.n_leaves} blocks, depth {frozen.depth})"
+    )
+
+    engine = LayoutEngine(frozen, backend=args.backend)
+    buffers = BlockBuffers.for_tree(frozen)
+    # warmup: compile the routing plan for every padding bucket the jittered
+    # stream will produce (incl. the tail remainder), so the ingest loop
+    # itself runs fully warm — zero retraces
+    sizes = batch_sizes(records.shape[0], args.batch, args.seed)
+    buckets = {pad_bucket(s, 64) for s in sizes}
+    for m in sorted(min(b, records.shape[0]) for b in buckets):
+        engine.route(records[:m])
+    report = engine.ingest(micro_batches(records, sizes), buffers=buffers)
+    print(
+        f"[ingest] {report.n_records} records / {report.n_batches} "
+        f"micro-batches in {report.wall_s:.2f}s -> "
+        f"{report.records_per_s:,.0f} rec/s on backend={report.backend}"
+    )
+    print(f"[ingest] plan cache: {report.plan_cache}")
+    print(f"[ingest] traces during ingest (0 ⇒ fully warm): {report.traces}")
+    print(f"[ingest] all traces: {trace_counts()}")
+
+    stats = engine.skip_stats(records, work, tighten=False)
+    print(
+        f"[ingest] layout quality: scanned fraction "
+        f"{stats.scanned_fraction:.4f} over {stats.n_queries} queries"
+    )
+
+    if args.store:
+        store = buffers.write_store(args.store, frozen)
+        print(
+            f"[ingest] persisted {int(store.sizes.sum())} rows in "
+            f"{store.sizes.shape[0]} blocks at {store.root}"
+        )
+    summary = {
+        "records_per_s": report.records_per_s,
+        "n_records": report.n_records,
+        "n_batches": report.n_batches,
+        "backend": report.backend,
+        "plan_cache": report.plan_cache,
+        "ingest_traces": report.traces,
+        "scanned_fraction": stats.scanned_fraction,
+    }
+    print(json.dumps(summary))
+
+
+if __name__ == "__main__":
+    main()

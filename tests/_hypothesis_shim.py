@@ -1,0 +1,104 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (dev-requirements).
+
+The tier-1 suite must collect and run on containers without ``hypothesis``
+installed.  This shim implements the tiny slice of the API the tests use —
+``@settings``/``@given`` plus ``st.integers``, ``st.sampled_from`` and
+``st.data()`` — by replaying each property ``max_examples`` times with a
+deterministic per-example RNG.  No shrinking, no database, no coverage
+heuristics: it is a fallback so property tests still execute (rather than
+skip) everywhere; install the real package for serious fuzzing.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+
+class _Strategy:
+    def draw(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def draw(self, rng):
+        return self.options[rng.randrange(len(self.options))]
+
+
+class _DataObject:
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+class _Data(_Strategy):
+    def draw(self, rng):
+        return _DataObject(rng)
+
+
+class _StrategiesNamespace:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        return _SampledFrom(options)
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _Data()
+
+
+strategies = st = _StrategiesNamespace()
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class settings:
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Replay the property with deterministic draws (no shrinking)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings is usually applied OUTSIDE @given, so the example
+            # budget lands on the wrapper — check it first.
+            n = getattr(
+                wrapper,
+                "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
+            for example in range(n):
+                rng = random.Random(example * 7919 + 0x5EED)
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # hide the inner signature: pytest must not mistake the strategy
+        # parameters (filled in by the replay loop above) for fixtures
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

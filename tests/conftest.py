@@ -6,6 +6,12 @@ from repro.data import datagen
 from repro.data import workload as wl
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (multi-device sharding sweeps)"
+    )
+
+
 @pytest.fixture(scope="session")
 def tpch_small():
     schema, records = datagen.make_tpch_like(8_000, seed=0)

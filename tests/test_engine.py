@@ -1,0 +1,339 @@
+"""LayoutEngine tests: backend registry + cross-backend bit-identity,
+compiled-plan cache behavior (same bucket ⇒ zero retraces), incremental
+vs one-shot tighten equivalence, and streaming ingestion into block buffers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import predicates as preds
+from repro.core import query as qry
+from repro.core import rewards
+from repro.core.qdtree import IncrementalTightener
+from repro.data.blocks import BlockBuffers, BlockStore
+from repro.engine import (
+    LayoutEngine,
+    PlanCache,
+    available_backends,
+    engine_for,
+    get_backend,
+    pad_bucket,
+)
+from repro.engine import plan as planlib
+from tests.test_qdtree import random_tree, small_setup
+from tests.test_query import random_query
+
+ALL_BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _frozen(seed=0):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    tree = random_tree(schema, cuts, records, rng)
+    return schema, records, cuts, tree.freeze()
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def test_registry_lists_all_backends():
+    assert set(ALL_BACKENDS) <= set(available_backends())
+    for name in ALL_BACKENDS:
+        assert get_backend(name).name == name
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("cuda")
+    _, _, _, frozen = _frozen()
+    with pytest.raises(ValueError, match="unknown backend"):
+        LayoutEngine(frozen, backend="cuda")
+
+
+def test_pad_bucket():
+    assert pad_bucket(1) == 1
+    assert pad_bucket(3) == 4
+    assert pad_bucket(256) == 256
+    assert pad_bucket(257) == 512
+    assert pad_bucket(5, minimum=64) == 64
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend bit-identity on randomized trees/workloads
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 7, 123])
+def test_backends_bit_identical_routing(seed):
+    schema, records, cuts, frozen = _frozen(seed)
+    eng = LayoutEngine(frozen)
+    want = frozen.route(records)
+    for backend in ALL_BACKENDS:
+        got = eng.route(records, backend=backend)
+        assert got.dtype == np.int32
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+
+@pytest.mark.parametrize("seed", [1, 42])
+def test_backends_bit_identical_query_hits(seed):
+    schema, records, cuts, frozen = _frozen(seed)
+    rng = np.random.default_rng(seed)
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(9))
+    )
+    wt = work.tensorize(cuts)
+    eng = LayoutEngine(frozen)
+    want = rewards.block_query_hits(frozen, wt)
+    for backend in ALL_BACKENDS:
+        got = eng.query_hits(wt, backend=backend)
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+
+def test_skip_stats_matches_evaluate_layout():
+    schema, records, cuts, frozen = _frozen(5)
+    rng = np.random.default_rng(5)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(5))
+    )
+    stats = engine_for(frozen).skip_stats(records, work)
+    assert stats.n_records == records.shape[0]
+    assert stats.scanned_tuples + stats.skipped_tuples == (
+        records.shape[0] * len(work)
+    )
+    # engine skip_stats on a fresh identical tree ≡ rewards.evaluate_layout
+    _, _, _, frozen2 = _frozen(5)
+    stats2 = rewards.evaluate_layout(frozen2, records, work)
+    assert stats.scanned_tuples == stats2.scanned_tuples
+    np.testing.assert_array_equal(stats.query_hits, stats2.query_hits)
+    np.testing.assert_array_equal(stats.block_sizes, stats2.block_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: same bucket ⇒ cache hit and zero retraces
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_plan_cache_same_bucket_no_retrace(backend):
+    schema, records, cuts, frozen = _frozen(11)
+    eng = LayoutEngine(frozen)
+    want = frozen.route(records)
+    # cold call compiles the plan for batch bucket pad_bucket(300) == 512
+    np.testing.assert_array_equal(
+        eng.route(records[:300], backend=backend), want[:300]
+    )
+    misses0 = eng.plans.stats()["misses"]
+    hits0 = eng.plans.stats()["hits"]
+    traces0 = sum(planlib.trace_counts().values())
+    # different batch sizes, same power-of-two bucket ⇒ plan-cache hits,
+    # zero retraces
+    for m in (290, 400, 511, 300):
+        np.testing.assert_array_equal(
+            eng.route(records[:m], backend=backend), want[:m]
+        )
+    assert eng.plans.stats()["misses"] == misses0
+    assert eng.plans.stats()["hits"] == hits0 + 4
+    assert sum(planlib.trace_counts().values()) == traces0
+    # a bucket-crossing batch reuses the packed operands (no plan miss) and
+    # compiles at most one new executable for the new batch bucket
+    big = np.concatenate([records, records])
+    np.testing.assert_array_equal(
+        eng.route(big, backend=backend), np.concatenate([want, want])
+    )
+    assert eng.plans.stats()["misses"] == misses0
+    assert sum(planlib.trace_counts().values()) <= traces0 + 1
+
+
+def test_plan_cache_shared_across_legacy_callsites():
+    from repro.core import routing
+    from repro.kernels import ops
+
+    schema, records, cuts, frozen = _frozen(13)
+    want = frozen.route(records[:256])
+    np.testing.assert_array_equal(
+        routing.route(frozen, records[:256], backend="pallas"), want
+    )
+    hits0 = engine_for(frozen).plans.stats()["hits"]
+    # ops.route_records dispatches through the same attached engine
+    np.testing.assert_array_equal(
+        ops.route_records(frozen, records[:256]), want
+    )
+    assert engine_for(frozen).plans.stats()["hits"] > hits0
+
+
+def test_query_plans_evicted_after_tighten_cycles():
+    """Ingest/score loops must not accumulate stale leaf-description plans."""
+    schema, records, cuts, frozen = _frozen(43)
+    rng = np.random.default_rng(43)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(3))
+    )
+    wt = work.tensorize(cuts)
+    eng = LayoutEngine(frozen)
+    eng.query_hits(wt, backend="jax")
+    size0 = eng.plans.stats()["size"]
+    bids = frozen.route(records)
+    for _ in range(5):  # repeated tighten bumps the description version
+        frozen.tighten(records, bids)
+        got = eng.query_hits(wt, backend="jax")
+        np.testing.assert_array_equal(
+            got, rewards.block_query_hits(frozen, wt)
+        )
+    assert eng.plans.stats()["size"] == size0  # stale versions evicted
+
+
+def test_workload_tensor_cache_handles_object_churn():
+    """id()-keyed caching must never serve tensors of a dead workload."""
+    schema, records, cuts, frozen = _frozen(47)
+    rng = np.random.default_rng(47)
+    eng = LayoutEngine(frozen)
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    for _ in range(30):  # churn temporaries so CPython reuses addresses
+        work = qry.Workload(
+            schema, tuple(random_query(schema, rng) for _ in range(2))
+        )
+        want = rewards.block_query_hits(frozen, work.tensorize(cuts))
+        np.testing.assert_array_equal(eng.query_hits(work), want)
+
+
+def test_plan_cache_stats_accounting():
+    cache = PlanCache()
+    built = []
+    for _ in range(3):
+        cache.get("k", lambda: built.append(1) or "plan")
+    assert cache.stats() == {"hits": 2, "misses": 1, "size": 1}
+    assert len(built) == 1
+
+
+# ---------------------------------------------------------------------------
+# Incremental vs one-shot tighten
+# ---------------------------------------------------------------------------
+def _tighten_reference(tree, records, bids):
+    """The original per-leaf Python loop, kept as the test oracle."""
+    adv_truth = preds.eval_adv(records, tree.cuts.adv)
+    off = tree.schema.cat_offsets
+    is_cat = tree.schema.is_categorical
+    lo = np.zeros_like(tree.leaf_lo)
+    hi = np.zeros_like(tree.leaf_hi)
+    cat = np.zeros_like(tree.leaf_cat)
+    adv = np.zeros_like(tree.leaf_adv)
+    for b in range(tree.n_leaves):
+        sel = bids == b
+        if not sel.any():
+            continue
+        rows = records[sel]
+        lo[b] = rows.min(axis=0)
+        hi[b] = rows.max(axis=0) + 1
+        for d in np.nonzero(is_cat)[0]:
+            cat[b, off[d] + np.unique(rows[:, d]).astype(np.int64)] = True
+        if tree.cuts.n_adv:
+            t = adv_truth[sel]
+            adv[b, :, 0] = t.any(axis=0)
+            adv[b, :, 1] = (~t).any(axis=0)
+    return lo, hi, cat, adv
+
+
+@pytest.mark.parametrize("seed", [0, 3, 17])
+def test_vectorized_tighten_matches_reference(seed):
+    schema, records, cuts, frozen = _frozen(seed)
+    bids = frozen.route(records)
+    want = _tighten_reference(frozen, records, bids)
+    frozen.tighten(records, bids)
+    got = (frozen.leaf_lo, frozen.leaf_hi, frozen.leaf_cat, frozen.leaf_adv)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(g, w)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 64, 10_000])
+def test_incremental_tighten_matches_batch(chunk):
+    schema, records, cuts, frozen = _frozen(23)
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    want = (
+        frozen.leaf_lo.copy(), frozen.leaf_hi.copy(),
+        frozen.leaf_cat.copy(), frozen.leaf_adv.copy(),
+    )
+    t = IncrementalTightener(frozen)
+    for s in range(0, records.shape[0], chunk):
+        t.update(records[s : s + chunk], bids[s : s + chunk])
+    t.apply()
+    got = (frozen.leaf_lo, frozen.leaf_hi, frozen.leaf_cat, frozen.leaf_adv)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_tighten_bumps_desc_version_and_query_plans_refresh():
+    schema, records, cuts, frozen = _frozen(29)
+    rng = np.random.default_rng(29)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(4))
+    )
+    wt = work.tensorize(cuts)
+    eng = LayoutEngine(frozen)
+    before = eng.query_hits(wt, backend="jax")
+    v0 = planlib.desc_version(frozen)
+    bids = frozen.route(records)
+    frozen.tighten(records, bids)
+    assert planlib.desc_version(frozen) == v0 + 1
+    after = eng.query_hits(wt, backend="jax")
+    want = rewards.block_query_hits(frozen, wt)
+    np.testing.assert_array_equal(after, want)
+    # tightening can only prune (hits never grow)
+    assert (after <= before).all()
+
+
+# ---------------------------------------------------------------------------
+# Streaming ingestion
+# ---------------------------------------------------------------------------
+def test_ingest_streams_into_buffers_and_store(tmp_path):
+    schema, records, cuts, frozen = _frozen(31)
+    eng = LayoutEngine(frozen, backend="numpy")
+    buffers = BlockBuffers.for_tree(frozen)
+    report = eng.ingest(
+        (records[s : s + 57] for s in range(0, records.shape[0], 57)),
+        buffers=buffers,
+    )
+    bids = frozen.route(records)
+    sizes = np.bincount(bids, minlength=frozen.n_leaves)
+    assert report.n_records == records.shape[0]
+    np.testing.assert_array_equal(report.block_sizes, sizes)
+    np.testing.assert_array_equal(buffers.sizes, sizes)
+    # buffered rows per block == one-shot grouping (order-preserving)
+    for b in range(frozen.n_leaves):
+        np.testing.assert_array_equal(buffers.block(b), records[bids == b])
+    # incremental tighten during ingest == one-shot tighten
+    _, _, _, fresh = _frozen(31)
+    fresh.tighten(records, bids)
+    np.testing.assert_array_equal(frozen.leaf_lo, fresh.leaf_lo)
+    np.testing.assert_array_equal(frozen.leaf_hi, fresh.leaf_hi)
+    # persisted store round-trips
+    store = buffers.write_store(tmp_path / "store", frozen)
+    reopened = BlockStore.open(tmp_path / "store")
+    np.testing.assert_array_equal(reopened.sizes, sizes)
+    np.testing.assert_array_equal(
+        reopened.read_block(0), records[bids == 0]
+    )
+
+
+def test_create_streaming_equals_create(tmp_path):
+    schema, records, cuts, frozen = _frozen(37)
+    _, _, _, frozen2 = _frozen(37)
+    s1 = BlockStore.create(tmp_path / "oneshot", frozen, records)
+    s2 = BlockStore.create_streaming(
+        tmp_path / "streamed",
+        frozen2,
+        (records[s : s + 101] for s in range(0, records.shape[0], 101)),
+    )
+    np.testing.assert_array_equal(s1.sizes, s2.sizes)
+    for b in range(frozen.n_leaves):
+        np.testing.assert_array_equal(s1.read_block(b), s2.read_block(b))
+    np.testing.assert_array_equal(frozen.leaf_lo, frozen2.leaf_lo)
+
+
+def test_ingest_empty_and_varying_batches():
+    schema, records, cuts, frozen = _frozen(41)
+    eng = LayoutEngine(frozen, backend="jax")
+    batches = [records[:0], records[:33], records[:0], records[33:190]]
+    report = eng.ingest(iter(batches))
+    assert report.n_batches == 2  # empty batches are skipped
+    assert report.n_records == 190
+    np.testing.assert_array_equal(
+        report.block_sizes,
+        np.bincount(frozen.route(records[:190]), minlength=frozen.n_leaves),
+    )

@@ -2,7 +2,10 @@
 BID routing returns exactly the intersecting blocks."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers without hypothesis
+    from tests._hypothesis_shim import given, settings, st
 
 from repro.core import predicates as preds
 from repro.core import query as qry
