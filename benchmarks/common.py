@@ -5,14 +5,11 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 
 import numpy as np
 
-from repro.baselines import bottom_up, partitioners
-from repro.core import greedy, rewards
-from repro.core.woodblock.agent import WoodblockConfig, build_woodblock
 from repro.data import datagen, workload as wl
+from repro.service import build_layout
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
 
@@ -50,77 +47,43 @@ def load_workload(name: str, scale: float = 1.0, seed: int = 0):
     return schema, records, work, labels, cuts, min_block
 
 
-def scanned_fraction_of(tree, bids, records, work, cuts):
-    sizes = np.bincount(bids, minlength=tree.n_leaves).astype(np.int64)
-    hits = rewards.block_query_hits(tree, work.tensorize(cuts))
-    return float(
-        (hits * sizes[:, None]).sum() / (records.shape[0] * len(work))
-    ), hits, sizes
-
-
-def build_layouts(name, schema, records, work, cuts, min_block,
+def build_layouts(name, records, work, cuts, min_block,
                   which=("baseline", "bottom_up", "greedy", "woodblock"),
                   rl_iters=20, seed=0):
-    """→ {approach: dict(tree, bids, scanned, build_s)}."""
+    """→ {approach: dict(tree, bids, scanned, build_s)}.
+
+    Each approach is one strategy in the ``repro.service`` builder registry;
+    "baseline" maps to the paper's per-dataset default (random shuffling for
+    TPC-H, range partitioning on ingest time for ErrorLog — Sec 7.3).
+    """
+    plans = {
+        "baseline": (
+            ("random", {}) if name == "tpch" else ("range", dict(column=0))
+        ),
+        "bottom_up": (
+            "bottom_up",
+            # BU+ tuning (Sec 7.5) on the ErrorLog datasets
+            dict(selectivity_ceiling=None if name == "tpch" else 0.10),
+        ),
+        "greedy": ("greedy", {}),
+        "woodblock": (
+            "woodblock", dict(n_iters=rl_iters, episodes_per_iter=4)
+        ),
+    }
     out = {}
-    if "baseline" in which:
-        t0 = time.perf_counter()
-        if name == "tpch":
-            tree, bids = partitioners.random_layout(
-                records, schema, cuts, min_block, seed=seed
-            )
-        else:  # ErrorLog default: range partition on ingest time
-            tree, bids = partitioners.range_layout(
-                records, schema, cuts, min_block, column=0
-            )
-        frac, _, _ = scanned_fraction_of(tree, bids, records, work, cuts)
-        out["baseline"] = dict(
-            tree=tree, bids=bids, scanned=frac,
-            build_s=time.perf_counter() - t0,
+    for approach in which:
+        strategy, cfg = plans[approach]
+        b = build_layout(
+            records, work, strategy=strategy, cuts=cuts,
+            min_block=min_block, seed=seed, **cfg,
         )
-    if "bottom_up" in which:
-        t0 = time.perf_counter()
-        ceiling = None if name == "tpch" else 0.10  # BU+ tuning (Sec 7.5)
-        tree, bids = bottom_up.build_bottom_up(
-            records, work, cuts,
-            bottom_up.BottomUpConfig(
-                block_size=min_block, max_features=15,
-                selectivity_ceiling=ceiling,
-            ),
+        entry = dict(
+            tree=b.tree, bids=b.bids, scanned=b.scanned_fraction,
+            build_s=b.build_s,
         )
-        frac, _, _ = scanned_fraction_of(tree, bids, records, work, cuts)
-        out["bottom_up"] = dict(
-            tree=tree, bids=bids, scanned=frac,
-            build_s=time.perf_counter() - t0,
-        )
-    if "greedy" in which:
-        t0 = time.perf_counter()
-        tree = greedy.build_greedy(
-            records, work, cuts, greedy.GreedyConfig(min_block=min_block)
-        )
-        frozen = tree.freeze()
-        bids = frozen.route(records)
-        frozen.tighten(records, bids)
-        frac, _, _ = scanned_fraction_of(frozen, bids, records, work, cuts)
-        out["greedy"] = dict(
-            tree=frozen, bids=bids, scanned=frac,
-            build_s=time.perf_counter() - t0,
-        )
-    if "woodblock" in which:
-        t0 = time.perf_counter()
-        cfg = WoodblockConfig(
-            min_block_sample=min_block, n_iters=rl_iters,
-            episodes_per_iter=4, seed=seed,
-        )
-        res = build_woodblock(records, work, cuts, cfg)
-        frozen = res.best_tree.freeze()
-        bids = frozen.route(records)
-        frozen.tighten(records, bids)
-        frac, _, _ = scanned_fraction_of(frozen, bids, records, work, cuts)
-        out["woodblock"] = dict(
-            tree=frozen, bids=bids, scanned=frac,
-            build_s=time.perf_counter() - t0, curve=res.curve,
-        )
+        if "curve" in b.metrics:
+            entry["curve"] = b.metrics["curve"]
+        out[approach] = entry
     return out
 
 

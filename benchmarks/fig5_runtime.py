@@ -24,7 +24,7 @@ def run(scale: float = 0.5, rl_iters: int = 12, seed: int = 0) -> dict:
             common.load_workload(name, scale, seed)
         )
         layouts = common.build_layouts(
-            name, schema, records, work, cuts, min_block,
+            name, records, work, cuts, min_block,
             which=("baseline", "bottom_up", "woodblock"),
             rl_iters=rl_iters, seed=seed,
         )

@@ -12,24 +12,20 @@ import time
 
 import numpy as np
 
-from repro.engine import LayoutEngine, available_backends
+from repro.engine import available_backends
+from repro.service import LayoutService
 from benchmarks import common
 
 
 def run(scale: float = 0.5, seed: int = 0) -> dict:
-    from repro.core import greedy
-
     schema, records, work, labels, cuts, min_block = common.load_workload(
         "tpch", scale, seed
     )
-    tree = greedy.build_greedy(
-        records, work, cuts, greedy.GreedyConfig(min_block=min_block)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=min_block
     )
-    frozen = tree.freeze()
-    bids = frozen.route(records)
-    frozen.tighten(records, bids)
-
-    engine = LayoutEngine(frozen)
+    engine = svc.engine
+    frozen = svc.tree
     batch = records[: min(32_768, records.shape[0])]
     thr = {}
     for backend in available_backends():
@@ -65,6 +61,20 @@ def run(scale: float = 0.5, seed: int = 0) -> dict:
         f"[fig6] query routing: p50={qlat['p50_ms']:.2f}ms "
         f"max={qlat['max_ms']:.2f}ms over {qlat['n_blocks']} blocks "
         f"(paper: <16ms max)"
+    )
+
+    # batched routing amortizes the whole workload into one dispatch — the
+    # p50 fix; benchmarks/query_routing.py measures it in depth
+    engine.route_queries(work, backend="jax")  # warmup: compile + tensorize
+    t0 = time.perf_counter()
+    engine.route_queries(work, backend="jax")
+    batched_s = time.perf_counter() - t0
+    qlat["batched_total_ms"] = 1e3 * batched_s
+    qlat["batched_per_query_ms"] = 1e3 * batched_s / len(work)
+    print(
+        f"[fig6] batched route_queries: "
+        f"{qlat['batched_per_query_ms']:.3f}ms/query amortized "
+        f"({len(work)} queries in {qlat['batched_total_ms']:.2f}ms)"
     )
     out = {
         "routing_throughput": thr,

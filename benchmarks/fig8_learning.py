@@ -8,7 +8,7 @@ harder exploration) — both match the paper's Fig. 8 narrative.
 
 from __future__ import annotations
 
-from repro.core.woodblock.agent import WoodblockConfig, build_woodblock
+from repro.service import build_layout
 from benchmarks import common
 
 
@@ -18,27 +18,27 @@ def run(scale: float = 0.5, rl_iters: int = 25, seed: int = 0) -> dict:
         schema, records, work, labels, cuts, min_block = (
             common.load_workload(name, scale, seed)
         )
-        cfg = WoodblockConfig(
-            min_block_sample=min_block,
-            n_iters=rl_iters,
-            episodes_per_iter=4,
-            seed=seed,
+        build = build_layout(
+            records, work, strategy="woodblock", cuts=cuts,
+            min_block=min_block, seed=seed,
+            n_iters=rl_iters, episodes_per_iter=4,
         )
-        res = build_woodblock(records, work, cuts, cfg)
         curve = [
             dict(wall_s=p.wall_s, episode=p.episode,
                  current=p.current_scanned, best=p.best_scanned)
-            for p in res.curve
+            for p in build.metrics["curve"]
         ]
+        best = build.metrics["best_scanned_sample"]
+        episodes = build.metrics["n_episodes"]
         out[name] = {
             "curve": curve,
             "first_best": curve[0]["best"],
-            "final_best": res.best_scanned,
-            "episodes": res.n_episodes,
+            "final_best": best,
+            "episodes": episodes,
         }
         print(
             f"[fig8] {name}: first tree {100*curve[0]['best']:.2f}% → "
-            f"best {100*res.best_scanned:.2f}% over {res.n_episodes} episodes"
+            f"best {100*best:.2f}% over {episodes} episodes"
         )
     common.write_result("fig8_learning", out)
     return out

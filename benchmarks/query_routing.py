@@ -1,0 +1,141 @@
+"""Single-query vs batched query routing: latency/throughput per backend.
+
+Measures the ROADMAP p50 fix: the per-query ``route_query`` loop (one
+tensorize + one intersection per query — the fig6 latency floor) against
+``LayoutEngine.route_queries``, which pushes the whole workload tensor
+through one ``query_hits`` dispatch with padding-bucket plan caching.
+
+Asserted acceptance criteria (recorded in ``BENCH_query_routing.json``):
+
+  * batched jax routing beats the per-query loop by ≥ 5x on a ≥ 64-query
+    workload,
+  * the warm batched measurement performs ZERO retraces (a same-bucket
+    warmup workload pre-compiles the plan; trace counters must not move).
+
+    PYTHONPATH=src python -m benchmarks.query_routing            # bench scale
+    PYTHONPATH=src python -m benchmarks.query_routing --smoke    # CI tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.data import workload as wl
+from repro.engine import plan as planlib
+from repro.service import LayoutService
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_query_routing.json"
+)
+
+MIN_QUERIES = 64
+MIN_SPEEDUP = 5.0
+
+
+def run(scale: float = 0.5, seed: int = 0, smoke: bool = False) -> dict:
+    if smoke:
+        scale = 0.05  # tiny shapes: exercises plan-cache/zero-retrace paths
+    schema, records, work, labels, cuts, min_block = common.load_workload(
+        "tpch", scale, seed
+    )
+    assert len(work) >= MIN_QUERIES, f"need ≥{MIN_QUERIES} queries"
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=min_block
+    )
+    engine = svc.engine
+    print(
+        f"[query_routing] {len(work)} queries over "
+        f"{engine.tree.n_leaves} blocks ({records.shape[0]} records)"
+    )
+
+    # ground truth + per-query loop timing (the fig6 p50 path)
+    t0 = time.perf_counter()
+    loop_lists = [engine.route_query(q) for q in work.queries]
+    loop_s = time.perf_counter() - t0
+
+    # a distinct same-shape workload warms every conjunct-bucket plan the
+    # measured workload will use, so the measured runs are fully warm
+    warm_work, _ = wl.make_tpch_workload(
+        schema, n_per_template=len(work) // 15, seed=seed + 1
+    )
+    reps = 3 if smoke else 5
+    results: dict = {
+        "n_queries": len(work),
+        "n_blocks": int(engine.tree.n_leaves),
+        "n_records": int(records.shape[0]),
+        "smoke": smoke,
+        "loop": {
+            "total_s": loop_s,
+            "per_query_ms": 1e3 * loop_s / len(work),
+            "queries_per_s": len(work) / loop_s,
+        },
+        "batched": {},
+    }
+    for backend in ("numpy", "jax"):
+        engine.route_queries(warm_work, backend=backend)
+        t0 = time.perf_counter()
+        cold_lists = engine.route_queries(work, backend=backend)
+        cold_s = time.perf_counter() - t0  # includes tensorization
+        for got, want in zip(cold_lists, loop_lists):
+            np.testing.assert_array_equal(got, want, err_msg=backend)
+
+        traces0 = sum(planlib.trace_counts().values())
+        cache0 = dict(engine.plans.stats())
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            engine.route_queries(work, backend=backend)
+        warm_s = (time.perf_counter() - t0) / reps
+        retraces = sum(planlib.trace_counts().values()) - traces0
+        cache1 = dict(engine.plans.stats())
+        assert retraces == 0, (
+            f"backend {backend}: warm batched routing retraced {retraces}x"
+        )
+        if backend == "jax":
+            assert cache1["misses"] == cache0["misses"], (
+                "warm batched routing missed the plan cache"
+            )
+        results["batched"][backend] = {
+            "cold_s": cold_s,
+            "warm_s": warm_s,
+            "queries_per_s": len(work) / warm_s,
+            "warm_retraces": int(retraces),
+            "speedup_vs_loop": loop_s / warm_s,
+        }
+        print(
+            f"[query_routing] {backend:>6}: loop {loop_s*1e3:8.2f}ms | "
+            f"batched warm {warm_s*1e3:8.2f}ms | "
+            f"{loop_s / warm_s:6.1f}x | retraces {retraces}"
+        )
+
+    jax_speedup = results["batched"]["jax"]["speedup_vs_loop"]
+    results["speedup_batched_jax_vs_loop"] = jax_speedup
+    results["warm_retraces"] = results["batched"]["jax"]["warm_retraces"]
+    results["assertions"] = {
+        "n_queries_ge_64": len(work) >= MIN_QUERIES,
+        "speedup_ge_5x": bool(jax_speedup >= MIN_SPEEDUP),
+        "zero_warm_retraces": results["warm_retraces"] == 0,
+    }
+    assert jax_speedup >= MIN_SPEEDUP, (
+        f"batched jax routing only {jax_speedup:.1f}x vs per-query loop "
+        f"(acceptance: ≥{MIN_SPEEDUP}x)"
+    )
+    results["plan_cache"] = engine.plans.stats()
+    OUT.write_text(json.dumps(results, indent=2))
+    print(f"[query_routing] wrote {OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (still asserts zero retraces)")
+    args = ap.parse_args()
+    run(scale=args.scale, seed=args.seed, smoke=args.smoke)

@@ -21,7 +21,7 @@ def run(scale: float = 1.0, rl_iters: int = 20, seed: int = 0) -> dict:
             common.load_workload(name, scale, seed)
         )
         layouts = common.build_layouts(
-            name, schema, records, work, cuts, min_block,
+            name, records, work, cuts, min_block,
             rl_iters=rl_iters, seed=seed,
         )
         lb = rewards.selectivity_lower_bound(records, work)

@@ -2,20 +2,18 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper end-to-end on a synthetic ErrorLog-like workload:
-greedy + WOODBLOCK construction, block-store persistence, query routing
-(`BID IN (...)`), and the logical/physical metrics of Table 2 / Fig 5.
+Walks the paper end-to-end on a synthetic ErrorLog-like workload through
+the LayoutService lifecycle: strategy-dispatched construction (builder
+registry), a scored rebuild with hot swap, block-store persistence, and
+query routing (`BID IN (...)`) with the Table 2 / Fig 5 metrics.
 """
 
 import tempfile
 
-import numpy as np
-
-from repro.baselines import partitioners
-from repro.core import greedy, rewards
-from repro.core.woodblock.agent import WoodblockConfig, build_woodblock
+from repro.core import rewards
 from repro.data import datagen, workload as wl
 from repro.data.blocks import BlockStore
+from repro.service import LayoutService, build_layout
 
 # 1. data + workload ---------------------------------------------------------
 schema, records = datagen.make_errorlog_int(40_000, seed=0)
@@ -24,35 +22,33 @@ cuts = work.candidate_cuts()  # Sec 3.4: pushed-down unary predicates
 print(f"{records.shape[0]:,} records, {len(work)} queries, "
       f"{cuts.n_cuts} candidate cuts")
 
-# 2. layouts -----------------------------------------------------------------
-base_tree, base_bids = partitioners.range_layout(
-    records, schema, cuts, block_size=400, column=0
-)
-sizes = np.bincount(base_bids, minlength=base_tree.n_leaves).astype(np.int64)
-hits = rewards.block_query_hits(base_tree, work.tensorize(cuts))
-base_frac = (hits * sizes[:, None]).sum() / (records.shape[0] * len(work))
-
-g_tree = greedy.build_greedy(
-    records, work, cuts, greedy.GreedyConfig(min_block=400)
-).freeze()
-g_stats = rewards.evaluate_layout(g_tree, records, work)
-
-res = build_woodblock(
-    records, work, cuts,
-    WoodblockConfig(min_block_sample=400, n_iters=10, episodes_per_iter=4),
-)
-w_tree = res.best_tree.freeze()
-w_stats = rewards.evaluate_layout(w_tree, records, work)
-
+# 2. layouts via the builder registry ---------------------------------------
+builds = {
+    strategy: build_layout(
+        records, work, strategy=strategy, cuts=cuts, min_block=400, **cfg
+    )
+    for strategy, cfg in (
+        ("range", dict(column=0)),  # ErrorLog default scheme
+        ("greedy", {}),
+        ("woodblock", dict(n_iters=10, episodes_per_iter=4)),
+    )
+}
 lb = rewards.selectivity_lower_bound(records, work)
-print(f"scanned: range-baseline {100*base_frac:.1f}%  "
-      f"greedy {100*g_stats.scanned_fraction:.2f}%  "
-      f"woodblock {100*w_stats.scanned_fraction:.2f}%  "
-      f"(selectivity lower bound {100*lb:.4f}%)")
+print("scanned: " + "  ".join(
+    f"{s} {100*b.scanned_fraction:.2f}%" for s, b in builds.items()
+) + f"  (selectivity lower bound {100*lb:.4f}%)")
 
-# 3. physical execution ------------------------------------------------------
+# 3. serve the best layout; rebuild-in-place hot-swaps improvements ----------
+svc = LayoutService(builds["greedy"])
+rep = svc.rebuild(records, work, strategy="woodblock", cuts=cuts,
+                  min_block=400, n_iters=10, episodes_per_iter=4)
+print(f"rebuild: live {100*rep.live_scanned:.2f}% vs candidate "
+      f"{100*rep.candidate_scanned:.2f}% -> "
+      f"{'swapped' if rep.swapped else 'kept'} (gen {svc.generation})")
+
+# 4. physical execution ------------------------------------------------------
 with tempfile.TemporaryDirectory() as td:
-    store = BlockStore.create(td, w_tree, records)
+    store = BlockStore.create(td, svc.tree, records)
     r = store.scan_query(work.queries[0])
     print(f"query 0: read {r.blocks_read}/{store.tree.n_leaves} blocks "
           f"({r.bytes_read:,} bytes) → {r.rows.shape[0]} rows "

@@ -6,7 +6,8 @@
 
 Both return the same artifacts as qd-tree layouts (BIDs + per-leaf min-max
 descriptions packed into a degenerate FrozenQdTree) so every downstream
-metric/benchmark treats all layouts uniformly.
+metric/benchmark treats all layouts uniformly.  They register as the
+``"random"`` / ``"range"`` strategies of ``repro.service.build_layout``.
 """
 
 from __future__ import annotations

@@ -12,6 +12,11 @@ which we evaluate for *all* candidate cuts of a node in one vectorized
 shot: child sizes come from one column-sum over the shared predicate
 matrix, and child skip counts from one stacked description↔workload
 intersection.
+
+This module is the ``"greedy"`` strategy behind the unified construction
+facade — prefer ``repro.service.build_layout(records, workload,
+strategy="greedy")``, which wraps it into the common ``LayoutBuild``
+artifact (tightened frozen tree + metrics + provenance).
 """
 
 from __future__ import annotations

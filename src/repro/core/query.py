@@ -245,12 +245,12 @@ def queries_intersect(
 def route_query(
     tree, query: Query  # tree: FrozenQdTree (avoid import cycle)
 ) -> np.ndarray:
-    """BID IN (...) list for one query (paper Sec 3.3)."""
-    wl = Workload(tree.schema, (query,))
-    wt = wl.tensorize(tree.cuts)
-    hits = conjuncts_intersect(
-        tree.leaf_lo, tree.leaf_hi, tree.leaf_cat, tree.leaf_adv, wt,
-        tree.schema,
-    )
-    q_hits = queries_intersect(hits, wt)[:, 0]
-    return np.nonzero(q_hits)[0].astype(np.int32)
+    """BID IN (...) list for one query (paper Sec 3.3) — compatibility shim.
+
+    Delegates to the tree's attached engine so there is a single
+    ``route_query`` implementation (``LayoutEngine.route_query``, itself a
+    1-query :meth:`~repro.engine.LayoutEngine.route_queries`).
+    """
+    from repro.engine import engine_for
+
+    return engine_for(tree).route_query(query)

@@ -5,6 +5,11 @@ workload-skipping reward, and refine the policy with PPO.  The best tree
 found is deployed (paper: "After attempting a fixed number of trees or if a
 timeout is reached, the best tree found is deployed").  A learning curve of
 (wall-clock, best/current scan fraction) is recorded to reproduce Fig 8.
+
+This module is the ``"woodblock"`` strategy behind the unified construction
+facade — prefer ``repro.service.build_layout(records, workload,
+strategy="woodblock", n_iters=...)`` for the common ``LayoutBuild``
+artifact (the learning curve lands in ``build.metrics["curve"]``).
 """
 
 from __future__ import annotations

@@ -1,10 +1,14 @@
 """LayoutEngine subsystem: one backend-dispatched routing/query API.
 
 Public surface:
-  LayoutEngine   — route / query_hits / skip_stats / ingest over a frozen tree
+  LayoutEngine   — route / query_hits / route_queries / skip_stats / ingest
+                   over a frozen tree
   engine_for     — the per-tree attached engine (shared plan cache)
   register_backend / get_backend / available_backends — backend registry
   PlanCache / pad_bucket / trace_counts — compiled-plan cache + counters
+
+The lifecycle layer above (strategy-dispatched construction, versioned
+hot-swap rebuild) lives in :mod:`repro.service`.
 """
 
 from repro.engine.backends import (  # noqa: F401

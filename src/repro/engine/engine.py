@@ -7,6 +7,7 @@ streaming ingestion into block buffers (data/blocks.py) behind one object:
     eng = LayoutEngine(frozen_tree, backend="jax")
     bids = eng.route(records)                   # any registered backend
     hits = eng.query_hits(workload)             # (n_leaves, n_queries) bool
+    lists = eng.route_queries(workload)         # per-query BID IN (...) lists
     stats = eng.skip_stats(records, workload)   # paper Eq. 1 metrics
     report = eng.ingest(batch_iter)             # online micro-batch ingestion
 
@@ -18,6 +19,7 @@ plan-cache and trace counters).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Iterable, Iterator, Optional
@@ -51,6 +53,8 @@ class IngestReport:
 class LayoutEngine:
     """Backend-dispatched routing/query API with a compiled-plan cache."""
 
+    WT_CACHE_CAP = 16  # live workload-tensor entries kept per engine
+
     def __init__(
         self,
         tree: FrozenQdTree,
@@ -63,11 +67,13 @@ class LayoutEngine:
         self.backend = backend
         self.interpret = interpret
         self.plans = plan_cache if plan_cache is not None else PlanCache()
-        # keeps a strong reference to the workload alongside its tensors:
-        # id() keys are only stable while the object is alive
-        self._wt_cache: dict[
+        # LRU of tensorized workloads.  Values keep a strong reference to
+        # the workload itself: while an entry lives its id() cannot be
+        # reused by CPython, so two distinct workloads can never alias the
+        # same key (the identity check in _tensorize is belt and braces).
+        self._wt_cache: collections.OrderedDict[
             int, tuple[qry.Workload, qry.WorkloadTensors]
-        ] = {}
+        ] = collections.OrderedDict()
 
     # -- dispatch -----------------------------------------------------------
     def _backend(self, override: Optional[str]) -> be.Backend:
@@ -90,13 +96,16 @@ class LayoutEngine:
 
     # -- query processing ---------------------------------------------------
     def _tensorize(self, workload: qry.Workload) -> qry.WorkloadTensors:
-        hit = self._wt_cache.get(id(workload))
+        key = id(workload)
+        hit = self._wt_cache.get(key)
         if hit is not None and hit[0] is workload:
+            self._wt_cache.move_to_end(key)
             return hit[1]
         wt = workload.tensorize(self.tree.cuts)
-        if len(self._wt_cache) >= 16:  # bound memory for workload churn
-            self._wt_cache.clear()
-        self._wt_cache[id(workload)] = (workload, wt)
+        self._wt_cache[key] = (workload, wt)
+        self._wt_cache.move_to_end(key)
+        while len(self._wt_cache) > self.WT_CACHE_CAP:
+            self._wt_cache.popitem(last=False)  # evict least-recently-used
         return wt
 
     def query_hits(
@@ -116,11 +125,41 @@ class LayoutEngine:
             self.tree, self.plans, wt, **kw
         )
 
+    def route_queries(
+        self,
+        workload: qry.Workload | qry.WorkloadTensors,
+        backend: Optional[str] = None,
+        **opts,
+    ) -> list[np.ndarray]:
+        """Per-query BID IN (...) lists for a whole workload (Sec 3.3).
+
+        The batched counterpart of :meth:`route_query` — one tensorization
+        and one ``query_hits`` dispatch serve every query, so the jitted
+        backends amortize compilation across the workload (the p50 latency
+        fix flagged in ROADMAP; see ``benchmarks/query_routing.py``).
+        """
+        wt = (
+            workload
+            if isinstance(workload, qry.WorkloadTensors)
+            else self._tensorize(workload)
+        )
+        hits = self.query_hits(wt, backend=backend, **opts)
+        return [
+            np.nonzero(hits[:, q])[0].astype(np.int32)
+            for q in range(wt.n_queries)
+        ]
+
     def route_query(self, query: qry.Query) -> np.ndarray:
-        """BID IN (...) list for one query (paper Sec 3.3)."""
+        """BID IN (...) list for one query — 1-query ``route_queries``.
+
+        Stays on the numpy backend (a single query never amortizes a jit
+        dispatch) and tensorizes directly so one-shot queries don't churn
+        the workload-tensor LRU.
+        """
         wl = qry.Workload(self.tree.schema, (query,))
-        hits = self.query_hits(wl.tensorize(self.tree.cuts), backend="numpy")
-        return np.nonzero(hits[:, 0])[0].astype(np.int32)
+        return self.route_queries(
+            wl.tensorize(self.tree.cuts), backend="numpy"
+        )[0]
 
     def skip_stats(
         self,

@@ -18,14 +18,13 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
 
-from repro.core import greedy
 from repro.data import datagen, workload as wl
 from repro.data.blocks import BlockBuffers
-from repro.engine import LayoutEngine, pad_bucket, trace_counts
+from repro.engine import pad_bucket, trace_counts
+from repro.service import LayoutService
 
 
 def make_workload(name: str, rows: int, seed: int):
@@ -71,7 +70,13 @@ def main() -> None:
     ap.add_argument("--backend", default="jax",
                     choices=("numpy", "jax", "pallas"))
     ap.add_argument("--workload", default="tpch")
+    ap.add_argument("--strategy", default="greedy",
+                    help="layout construction strategy "
+                         "(repro.service builder registry)")
     ap.add_argument("--min-block", type=int, default=600)
+    ap.add_argument("--rebuild", action="store_true",
+                    help="after ingest, rebuild on the full corpus and "
+                         "hot-swap if the Eq.1 skip rate improves")
     ap.add_argument("--store", default=None,
                     help="optional path to persist the ingested BlockStore")
     ap.add_argument("--seed", type=int, default=0)
@@ -85,18 +90,18 @@ def main() -> None:
     sample_min_block = max(
         args.min_block * sample.shape[0] // max(args.rows, 1), 50
     )
-    t0 = time.perf_counter()
-    tree = greedy.build_greedy(
-        sample, work, cuts, greedy.GreedyConfig(min_block=sample_min_block)
+    service = LayoutService.build(
+        sample, work, strategy=args.strategy, backend=args.backend,
+        cuts=cuts, min_block=sample_min_block, seed=args.seed,
     )
-    frozen = tree.freeze()
-    build_s = time.perf_counter() - t0
+    frozen = service.tree
     print(
-        f"[ingest] built qd-tree on {sample.shape[0]} bootstrap rows in "
-        f"{build_s:.2f}s ({frozen.n_leaves} blocks, depth {frozen.depth})"
+        f"[ingest] built {args.strategy} layout on {sample.shape[0]} "
+        f"bootstrap rows in {service.version(1).build.build_s:.2f}s "
+        f"({frozen.n_leaves} blocks, depth {frozen.depth})"
     )
 
-    engine = LayoutEngine(frozen, backend=args.backend)
+    engine = service.engine
     buffers = BlockBuffers.for_tree(frozen)
     # warmup: compile the routing plan for every padding bucket the jittered
     # stream will produce (incl. the tail remainder), so the ingest loop
@@ -121,6 +126,26 @@ def main() -> None:
         f"{stats.scanned_fraction:.4f} over {stats.n_queries} queries"
     )
 
+    rebuild_summary = None
+    if args.rebuild:
+        # the bootstrap tree was built on 10% of the corpus — rebuild on
+        # everything and hot-swap behind the serving facade if it wins
+        rep = service.rebuild(
+            records, work, cuts=cuts, min_block=args.min_block,
+            seed=args.seed,
+        )
+        print(
+            f"[ingest] rebuild: live {rep.live_scanned:.4f} vs candidate "
+            f"{rep.candidate_scanned:.4f} -> "
+            f"{'swapped to gen ' + str(rep.new_generation) if rep.swapped else 'kept gen ' + str(rep.old_generation)}"
+        )
+        rebuild_summary = {
+            "swapped": rep.swapped,
+            "live_scanned": rep.live_scanned,
+            "candidate_scanned": rep.candidate_scanned,
+            "generation": service.generation,
+        }
+
     if args.store:
         store = buffers.write_store(args.store, frozen)
         print(
@@ -132,9 +157,11 @@ def main() -> None:
         "n_records": report.n_records,
         "n_batches": report.n_batches,
         "backend": report.backend,
+        "strategy": args.strategy,
         "plan_cache": report.plan_cache,
         "ingest_traces": report.traces,
         "scanned_fraction": stats.scanned_fraction,
+        "rebuild": rebuild_summary,
     }
     print(json.dumps(summary))
 

@@ -1,0 +1,23 @@
+"""LayoutService subsystem: one lifecycle API over qd-tree layouts.
+
+Public surface:
+  build_layout / LayoutBuild            — strategy-dispatched construction
+  register_builder / get_builder / available_strategies — builder registry
+  LayoutService                          — versioned serving facade with
+                                           rebuild-in-place hot swap
+  LayoutVersion / RebuildReport          — lifecycle artifacts
+"""
+
+from repro.service.builders import (  # noqa: F401
+    LayoutBuild,
+    LayoutBuilder,
+    available_strategies,
+    build_layout,
+    get_builder,
+    register_builder,
+)
+from repro.service.service import (  # noqa: F401
+    LayoutService,
+    LayoutVersion,
+    RebuildReport,
+)

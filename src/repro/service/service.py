@@ -1,0 +1,299 @@
+"""LayoutService: one lifecycle API over qd-tree layouts.
+
+Construction (the builder registry), serving (routing / batched query
+routing through the LayoutEngine), and online re-optimization (versioned
+rebuild with hot swap) behind a single facade:
+
+    svc = LayoutService.build(records, workload, strategy="greedy")
+    bids = svc.route(records)                 # live tree, any backend
+    lists = svc.route_queries(workload)       # batched BID IN (...) lists
+    report = svc.rebuild(recent, workload)    # candidate → score → hot swap
+
+Versioning: every deployed tree gets a monotonically-increasing generation.
+All generations share ONE compiled-plan cache — plan keys include the tree
+signature (engine/plan.py), so the plans of the outgoing tree stay valid and
+warm during a swap, and queries in flight against the old engine keep
+routing bit-identically until :meth:`release` drops that generation and
+evicts its plans.  ``rebuild`` builds a candidate on recent data, scores it
+against the live tree with the paper's Eq. 1 skip rate, and swaps only on
+strict improvement (or ``swap="always"``); :meth:`rollback` restores any
+retained generation.  This is the "tree rebuild-in-place" step toward the
+dynamic-layout follow-up (arXiv:2405.04984) and the online re-optimization
+loop of Lachesis (arXiv:2006.16529).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from repro.core import query as qry
+from repro.core.qdtree import FrozenQdTree
+from repro.engine import LayoutEngine, PlanCache
+from repro.engine import plan as planlib
+from repro.engine.plan import PlanKey
+from repro.service.builders import LayoutBuild, build_layout
+
+
+@dataclasses.dataclass
+class LayoutVersion:
+    """One deployed tree: generation counter + its engine + build artifact."""
+
+    generation: int
+    build: LayoutBuild
+    engine: LayoutEngine
+
+    @property
+    def tree(self) -> FrozenQdTree:
+        return self.build.tree
+
+
+@dataclasses.dataclass
+class RebuildReport:
+    """Outcome of one ``rebuild`` cycle."""
+
+    strategy: str
+    build: LayoutBuild  # the candidate (deployed iff ``swapped``)
+    candidate_scanned: float  # Eq. 1 scanned fraction on the rebuild inputs
+    live_scanned: float
+    swapped: bool
+    old_generation: int
+    new_generation: int  # == old_generation when not swapped
+    build_s: float
+    score_s: float
+
+    @property
+    def improvement(self) -> float:
+        return self.live_scanned - self.candidate_scanned
+
+
+class LayoutService:
+    """Versioned layout lifecycle: build → serve → rebuild/swap/rollback."""
+
+    def __init__(
+        self,
+        layout: LayoutBuild | FrozenQdTree,
+        backend: str = "jax",
+        interpret: Optional[bool] = None,
+        plan_cache: Optional[PlanCache] = None,
+    ):
+        if isinstance(layout, FrozenQdTree):
+            layout = _adopt_tree(layout)
+        self.backend = backend
+        self.interpret = interpret
+        self.plans = plan_cache if plan_cache is not None else PlanCache()
+        self._lock = threading.Lock()
+        self._gen = 0
+        self._versions: dict[int, LayoutVersion] = {}
+        self._live = self._new_version(layout)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        records: np.ndarray,
+        workload: qry.Workload,
+        strategy: str = "greedy",
+        backend: str = "jax",
+        **cfg,
+    ) -> "LayoutService":
+        """Build an initial layout with any registered strategy and serve it."""
+        return cls(
+            build_layout(records, workload, strategy=strategy, **cfg),
+            backend=backend,
+        )
+
+    def _new_version(self, build: LayoutBuild) -> LayoutVersion:
+        # all versions share self.plans: plan keys carry the tree signature,
+        # so old and new compiled plans coexist during a cutover
+        eng = LayoutEngine(
+            build.tree,
+            backend=self.backend,
+            interpret=self.interpret,
+            plan_cache=self.plans,
+        )
+        self._gen += 1
+        v = LayoutVersion(generation=self._gen, build=build, engine=eng)
+        self._versions[v.generation] = v
+        return v
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def generation(self) -> int:
+        """Generation of the live tree."""
+        return self._live.generation
+
+    @property
+    def engine(self) -> LayoutEngine:
+        """The live engine (grab once for a consistent view across calls)."""
+        return self._live.engine
+
+    @property
+    def tree(self) -> FrozenQdTree:
+        return self._live.tree
+
+    def versions(self) -> tuple[int, ...]:
+        """Retained generations, oldest first."""
+        return tuple(sorted(self._versions))
+
+    def version(self, generation: int) -> LayoutVersion:
+        return self._versions[generation]
+
+    def stats(self) -> dict:
+        return {
+            "generation": self.generation,
+            "versions": self.versions(),
+            "backend": self.backend,
+            "plan_cache": self.plans.stats(),
+        }
+
+    # -- serving facade (always the live tree) ------------------------------
+    def route(self, records: np.ndarray, **kw) -> np.ndarray:
+        return self._live.engine.route(records, **kw)
+
+    def query_hits(self, workload, **kw) -> np.ndarray:
+        return self._live.engine.query_hits(workload, **kw)
+
+    def route_query(self, query: qry.Query) -> np.ndarray:
+        return self._live.engine.route_query(query)
+
+    def route_queries(self, workload, **kw) -> list[np.ndarray]:
+        return self._live.engine.route_queries(workload, **kw)
+
+    def skip_stats(self, records, workload, **kw):
+        return self._live.engine.skip_stats(records, workload, **kw)
+
+    def ingest(self, batches: Iterable[np.ndarray], **kw):
+        return self._live.engine.ingest(batches, **kw)
+
+    # -- lifecycle: swap / rollback / release --------------------------------
+    def swap(self, build: LayoutBuild) -> int:
+        """Deploy ``build`` as a new generation (atomic); returns it."""
+        with self._lock:
+            v = self._new_version(build)
+            self._live = v  # single reference assignment — atomic swap
+            return v.generation
+
+    def _swap_if_live_is(
+        self, expected: LayoutVersion, build: LayoutBuild
+    ) -> Optional[int]:
+        """Compare-and-swap: deploy ``build`` only if ``expected`` is still
+        live.  Returns the new generation, or None if the baseline went
+        stale (another swap won the race)."""
+        with self._lock:
+            if self._live is not expected:
+                return None
+            v = self._new_version(build)
+            self._live = v
+            return v.generation
+
+    def rollback(self, generation: Optional[int] = None) -> int:
+        """Make a retained generation live again (default: the previous)."""
+        with self._lock:
+            if generation is None:
+                older = [
+                    g for g in self._versions if g < self._live.generation
+                ]
+                if not older:
+                    raise ValueError("no older generation to roll back to")
+                generation = max(older)
+            self._live = self._versions[generation]
+            return generation
+
+    def release(self, generation: int) -> int:
+        """Drop a retained generation and evict its compiled plans.
+
+        Returns the number of plan-cache entries evicted.  The live
+        generation cannot be released.
+        """
+        with self._lock:
+            if generation == self._live.generation:
+                raise ValueError("cannot release the live generation")
+            v = self._versions.pop(generation)
+            sig = planlib.tree_signature(v.tree)
+            return self.plans.evict(
+                lambda k: isinstance(k, PlanKey) and k.sig == sig
+            )
+
+    # -- rebuild-in-place ----------------------------------------------------
+    def rebuild(
+        self,
+        records: np.ndarray,
+        workload: qry.Workload,
+        strategy: Optional[str] = None,
+        swap: str = "if_better",  # "if_better" | "always" | "never"
+        on_candidate: Optional[Callable[[LayoutBuild], None]] = None,
+        **cfg,
+    ) -> RebuildReport:
+        """Build a candidate on ``records``, score vs live, hot-swap.
+
+        The candidate is constructed and scored entirely off to the side:
+        serving keeps hitting the current tree (and its cached plans)
+        until the single atomic swap.  Scoring is the paper's Eq. 1
+        scanned fraction over (records, workload); the live tree is scored
+        with ``tighten=False`` so production descriptions aren't mutated.
+        ``on_candidate`` (if given) runs after the candidate is built and
+        scored but before any swap — a seam for tests and monitoring.
+        """
+        if swap not in ("if_better", "always", "never"):
+            raise ValueError(f"invalid swap policy {swap!r}")
+        live = self._live  # consistent view for the whole cycle
+        if strategy is None:
+            from repro.service.builders import available_strategies
+
+            # adopted trees (bare FrozenQdTree) carry no registered
+            # strategy — rebuild them with the greedy default
+            strategy = live.build.strategy
+            if strategy not in available_strategies():
+                strategy = "greedy"
+        candidate = build_layout(
+            records, workload, strategy=strategy, **cfg
+        )
+        t0 = time.perf_counter()
+        candidate_scanned = candidate.scanned_fraction
+        live_scanned = live.engine.skip_stats(
+            records, workload, tighten=False
+        ).scanned_fraction
+        score_s = time.perf_counter() - t0
+        if on_candidate is not None:
+            on_candidate(candidate)
+        if swap == "always":
+            new_gen = self.swap(candidate)
+            do_swap = True
+        elif swap == "if_better" and candidate_scanned < live_scanned:
+            # compare-and-swap: the improvement was measured against
+            # ``live`` — if a concurrent rebuild already replaced it, the
+            # comparison is stale, so don't deploy on top of it
+            got = self._swap_if_live_is(live, candidate)
+            do_swap = got is not None
+            new_gen = got if do_swap else live.generation
+        else:
+            do_swap = False
+            new_gen = live.generation
+        return RebuildReport(
+            strategy=strategy,
+            build=candidate,
+            candidate_scanned=candidate_scanned,
+            live_scanned=live_scanned,
+            swapped=do_swap,
+            old_generation=live.generation,
+            new_generation=new_gen,
+            build_s=candidate.build_s,
+            score_s=score_s,
+        )
+
+
+def _adopt_tree(tree: FrozenQdTree) -> LayoutBuild:
+    """Wrap a pre-built FrozenQdTree as a minimal LayoutBuild artifact."""
+    return LayoutBuild(
+        tree=tree,
+        bids=np.zeros(0, np.int32),
+        strategy="adopted",
+        build_s=0.0,
+        metrics={"scanned_fraction": float("nan"), "n_leaves": tree.n_leaves},
+        provenance={"strategy": "adopted"},
+    )

@@ -1,0 +1,309 @@
+"""LayoutService tests: builder-registry parity across strategies and
+backends, batched vs per-query routing equivalence, and versioned
+rebuild-in-place (hot swap keeps pre-swap plans usable and bit-identical,
+rollback/release semantics)."""
+
+import numpy as np
+import pytest
+
+from repro.core import query as qry
+from repro.engine import LayoutEngine
+from repro.engine import plan as planlib
+from repro.engine.plan import PlanKey
+from repro.service import (
+    LayoutBuild,
+    LayoutService,
+    available_strategies,
+    build_layout,
+    get_builder,
+)
+from tests.test_qdtree import small_setup
+from tests.test_query import random_query
+
+STRATEGY_CFG = {
+    "greedy": {},
+    "woodblock": dict(n_iters=2, episodes_per_iter=2),
+    "bottom_up": {},
+    "random": {},
+    "range": dict(column=0),
+}
+
+
+def _setup(seed=0, n_queries=8):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(n_queries))
+    )
+    return schema, records, cuts, work
+
+
+# ---------------------------------------------------------------------------
+# Builder registry
+# ---------------------------------------------------------------------------
+def test_registry_covers_all_strategies():
+    assert {"greedy", "woodblock", "random", "range", "bottom_up"} <= set(
+        available_strategies()
+    )
+    for name in available_strategies():
+        assert get_builder(name).name == name
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_builder("kd_tree")
+
+
+def test_unknown_config_keys_rejected():
+    _, records, cuts, work = _setup()
+    with pytest.raises(TypeError, match="unknown config keys"):
+        build_layout(
+            records, work, strategy="greedy", cuts=cuts, min_block=30,
+            episodes_per_iter=4,  # woodblock-only key
+        )
+
+
+@pytest.mark.parametrize("strategy", sorted(STRATEGY_CFG))
+def test_every_strategy_returns_parity_checked_layout_build(strategy):
+    """Each strategy → LayoutBuild whose tree round-trips through the
+    engine with identical SkipStats on the numpy and jax backends."""
+    _, records, cuts, work = _setup(3)
+    build = build_layout(
+        records, work, strategy=strategy, cuts=cuts, min_block=30,
+        **STRATEGY_CFG[strategy],
+    )
+    assert isinstance(build, LayoutBuild)
+    assert build.strategy == strategy
+    assert build.bids.shape == (records.shape[0],)
+    assert build.n_leaves >= 1
+    assert 0.0 <= build.scanned_fraction <= 1.0
+    assert build.provenance["n_records"] == records.shape[0]
+    assert build.provenance["min_block"] == 30
+
+    eng = LayoutEngine(build.tree)
+    stats = {
+        b: eng.skip_stats(records, work, tighten=False, backend=b)
+        for b in ("numpy", "jax")
+    }
+    np.testing.assert_array_equal(
+        eng.route(records, backend="numpy"),
+        eng.route(records, backend="jax"),
+    )
+    assert stats["numpy"].scanned_tuples == stats["jax"].scanned_tuples
+    np.testing.assert_array_equal(
+        stats["numpy"].query_hits, stats["jax"].query_hits
+    )
+    np.testing.assert_array_equal(
+        stats["numpy"].block_sizes, stats["jax"].block_sizes
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched query routing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_route_queries_matches_per_query_loop(backend):
+    _, records, cuts, work = _setup(7, n_queries=12)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    batched = svc.route_queries(work, backend=backend)
+    assert len(batched) == len(work)
+    per_query = [svc.route_query(q) for q in work.queries]
+    for got, want in zip(batched, per_query):
+        assert got.dtype == np.int32
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+
+def test_core_route_query_delegates_to_engine():
+    """Single source of truth: qry.route_query ≡ LayoutEngine.route_query."""
+    from repro.engine import engine_for
+
+    _, records, cuts, work = _setup(9)
+    build = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    for q in work.queries:
+        np.testing.assert_array_equal(
+            qry.route_query(build.tree, q),
+            engine_for(build.tree).route_query(q),
+        )
+
+
+def test_workload_tensor_cache_is_lru():
+    _, records, cuts, work = _setup(11)
+    build = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    eng = LayoutEngine(build.tree)
+    rng = np.random.default_rng(11)
+    keep = qry.Workload(
+        build.tree.schema, tuple(random_query(build.tree.schema, rng)
+                                 for _ in range(2))
+    )
+    eng.query_hits(keep, backend="numpy")
+    churn = [
+        qry.Workload(
+            build.tree.schema,
+            tuple(random_query(build.tree.schema, rng) for _ in range(2)),
+        )
+        for _ in range(eng.WT_CACHE_CAP + 5)
+    ]
+    for i, w in enumerate(churn):
+        eng.query_hits(keep, backend="numpy")  # touch: keep stays hot
+        eng.query_hits(w, backend="numpy")
+    assert len(eng._wt_cache) == eng.WT_CACHE_CAP  # bounded, not cleared
+    assert any(entry[0] is keep for entry in eng._wt_cache.values())
+    # aliasing-impossible invariant: every key is the id of the workload the
+    # entry strongly references (so that id cannot be reused while cached)
+    assert all(k == id(entry[0]) for k, entry in eng._wt_cache.items())
+
+
+# ---------------------------------------------------------------------------
+# Versioned rebuild-in-place
+# ---------------------------------------------------------------------------
+def test_rebuild_hot_swap_keeps_preswap_plans_usable():
+    _, records, cuts, work = _setup(13)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=60
+    )
+    gen0 = svc.generation
+    old_engine = svc.engine
+    old_sig = planlib.tree_signature(svc.tree)
+    want_bids = svc.route(records, backend="jax")
+    want_lists = svc.route_queries(work, backend="jax")
+
+    # routing stays consistent mid-rebuild: the hook runs after the
+    # candidate is built/scored but before the swap
+    seen = {}
+
+    def mid_rebuild(candidate):
+        seen["generation"] = svc.generation
+        np.testing.assert_array_equal(
+            svc.route(records, backend="jax"), want_bids
+        )
+
+    report = svc.rebuild(
+        records, work, cuts=cuts, min_block=30, swap="always",
+        on_candidate=mid_rebuild,
+    )
+    assert seen["generation"] == gen0
+    assert report.swapped and report.new_generation > gen0
+    assert svc.generation == report.new_generation
+    assert svc.versions() == (gen0, report.new_generation)
+    # the live tree changed shape — rebuild really produced a new layout
+    assert planlib.tree_signature(svc.tree) != old_sig
+
+    # pre-swap plan-cache entries stay usable: the old generation routes
+    # bit-identically, entirely from cache (no new misses, no retraces)
+    misses0 = svc.plans.stats()["misses"]
+    traces0 = sum(planlib.trace_counts().values())
+    np.testing.assert_array_equal(
+        old_engine.route(records, backend="jax"), want_bids
+    )
+    for got, want in zip(
+        old_engine.route_queries(work, backend="jax"), want_lists
+    ):
+        np.testing.assert_array_equal(got, want)
+    assert svc.plans.stats()["misses"] == misses0
+    assert sum(planlib.trace_counts().values()) == traces0
+
+    # rollback restores the old generation as live
+    assert svc.rollback() == gen0
+    np.testing.assert_array_equal(svc.route(records, backend="jax"),
+                                  want_bids)
+    svc.rollback(report.new_generation)
+
+    # release drops the old generation and evicts exactly its plans
+    assert svc.plans.evict(lambda k: False) == 0  # sanity: evict is selective
+    n_old = sum(
+        1 for k in svc.plans._plans
+        if isinstance(k, PlanKey) and k.sig == old_sig
+    )
+    assert n_old > 0
+    assert svc.release(gen0) == n_old
+    assert svc.versions() == (report.new_generation,)
+    with pytest.raises(KeyError):
+        svc.version(gen0)
+    # live serving unaffected by the release
+    svc.route(records, backend="jax")
+
+
+def test_rebuild_if_better_policy():
+    _, records, cuts, work = _setup(17)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    gen0 = svc.generation
+    # a random layout over the same data cannot beat greedy here
+    report = svc.rebuild(
+        records, work, strategy="random", cuts=cuts, min_block=30
+    )
+    assert report.candidate_scanned >= report.live_scanned
+    assert not report.swapped
+    assert svc.generation == gen0 == report.new_generation
+    # but the candidate artifact is returned, so callers may force-deploy
+    gen1 = svc.swap(report.build)
+    assert svc.generation == gen1 > gen0
+
+
+def test_rebuild_never_policy_and_validation():
+    _, records, cuts, work = _setup(19)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    report = svc.rebuild(
+        records, work, cuts=cuts, min_block=20, swap="never"
+    )
+    assert not report.swapped and svc.generation == report.old_generation
+    with pytest.raises(ValueError, match="invalid swap policy"):
+        svc.rebuild(records, work, cuts=cuts, swap="maybe")
+    with pytest.raises(ValueError, match="cannot release the live"):
+        svc.release(svc.generation)
+    with pytest.raises(ValueError, match="no older generation"):
+        svc.rollback()
+
+
+def test_rebuild_if_better_is_stale_safe():
+    """A concurrent swap mid-rebuild invalidates the scored baseline — the
+    rebuild must not deploy its candidate on top of the newer tree."""
+    _, records, cuts, work = _setup(29)
+    svc = LayoutService.build(
+        records, work, strategy="random", cuts=cuts, min_block=30
+    )
+    racing_build = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+
+    def concurrent_swap(candidate):
+        svc.swap(racing_build)  # another rebuild wins the race
+
+    report = svc.rebuild(
+        records, work, strategy="greedy", cuts=cuts, min_block=40,
+        on_candidate=concurrent_swap,
+    )
+    # the candidate beat the (stale) random baseline it was scored against…
+    assert report.candidate_scanned < report.live_scanned
+    # …but must not be deployed over the concurrently-swapped tree
+    assert not report.swapped
+    assert svc.tree is racing_build.tree
+
+
+def test_rebuild_defaults_to_greedy_for_adopted_tree():
+    _, records, cuts, work = _setup(31)
+    build = build_layout(
+        records, work, strategy="random", cuts=cuts, min_block=30
+    )
+    svc = LayoutService(build.tree)  # adopted: strategy not in registry
+    report = svc.rebuild(records, work, cuts=cuts, min_block=30)
+    assert report.strategy == "greedy"
+    assert report.swapped  # greedy beats the random layout it adopted
+
+
+def test_service_adopts_bare_frozen_tree():
+    _, records, cuts, work = _setup(23)
+    build = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    svc = LayoutService(build.tree, backend="numpy")
+    np.testing.assert_array_equal(
+        svc.route(records), build.tree.route(records)
+    )
+    assert svc.version(svc.generation).build.strategy == "adopted"
