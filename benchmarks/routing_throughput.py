@@ -10,11 +10,13 @@ For each registered backend this measures
 
 Results land in ``BENCH_routing_throughput.json`` at the repo root.
 
-    PYTHONPATH=src python -m benchmarks.routing_throughput
+    PYTHONPATH=src python -m benchmarks.routing_throughput           # bench
+    PYTHONPATH=src python -m benchmarks.routing_throughput --smoke   # CI tiny
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import time
@@ -38,9 +40,11 @@ def _time_route(engine, batch, backend, reps=3):
     return out, dt
 
 
-def run(scale: float = 0.5, seed: int = 0) -> dict:
+def run(scale: float = 0.5, seed: int = 0, smoke: bool = False) -> dict:
     from repro.core import greedy
 
+    if smoke:
+        scale = 0.05  # tiny shapes; same warm/zero-retrace assertions
     schema, records, work, labels, cuts, min_block = common.load_workload(
         "tpch", scale, seed
     )
@@ -59,7 +63,11 @@ def run(scale: float = 0.5, seed: int = 0) -> dict:
     cold_batch = records[:m_cold]
     warm_batch = records[-m_warm:]
 
-    results: dict = {"backends": {}, "n_blocks": int(frozen.n_leaves)}
+    results: dict = {
+        "backends": {},
+        "n_blocks": int(frozen.n_leaves),
+        "smoke": smoke,
+    }
     for backend in available_backends():
         t0 = time.perf_counter()
         out_cold = engine.route(cold_batch, backend=backend)
@@ -104,10 +112,18 @@ def run(scale: float = 0.5, seed: int = 0) -> dict:
 
     results["plan_cache"] = engine.plans.stats()
     results["traces"] = planlib.trace_counts()
-    OUT.write_text(json.dumps(results, indent=2))
-    print(f"[routing_throughput] wrote {OUT}")
+    # smoke runs (CI) must not clobber the committed bench-scale numbers
+    out = OUT.with_stem(OUT.stem + "_smoke") if smoke else OUT
+    out.write_text(json.dumps(results, indent=2))
+    print(f"[routing_throughput] wrote {out}")
     return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (still asserts zero retraces)")
+    args = ap.parse_args()
+    run(scale=args.scale, seed=args.seed, smoke=args.smoke)

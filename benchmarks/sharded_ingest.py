@@ -1,0 +1,151 @@
+"""Sharded ingestion: shard-scaling throughput + bit-identity acceptance.
+
+For each shard count k ∈ {1, 2, 4, 8} this routes the same record stream
+through ``repro.engine.sharded`` (k parallel ShardIngestors over replicated
+plans, associative ShardState merge) and asserts the acceptance criteria
+recorded in ``BENCH_sharded_ingest.json``:
+
+  * every k produces BIT-IDENTICAL tightened leaf descriptions and
+    per-block row counts vs single-stream ``LayoutEngine.ingest``,
+  * with pre-warmed padding buckets the sharded runs perform ZERO retraces
+    (every shard reuses the same compiled plans).
+
+Reported per k: pooled shard routing throughput (records / slowest-shard
+wall clock), end-to-end wall, and merge+publish cost.
+
+    PYTHONPATH=src python -m benchmarks.sharded_ingest            # bench scale
+    PYTHONPATH=src python -m benchmarks.sharded_ingest --smoke    # CI tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from benchmarks import common
+from repro.engine import LayoutEngine, pad_bucket, replicate_tree, sharded_ingest
+from repro.engine.sharded import micro_batches, warm_sizes
+from repro.service import build_layout
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_sharded_ingest.json"
+)
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _warm_buckets(engine: LayoutEngine, records, batch: int, n_shards: int):
+    """Compile every padding bucket the sharded run will hit."""
+    n = records.shape[0]
+    sizes = warm_sizes(n, n_shards, batch)
+    for bucket in sorted({pad_bucket(s, 64) for s in sizes}):
+        engine.route(records[: min(bucket, n)])
+
+
+def run(scale: float = 0.5, seed: int = 0, smoke: bool = False,
+        backend: str = "jax", batch: int = 2048) -> dict:
+    if smoke:
+        scale, batch = 0.05, 256  # tiny shapes; same assertions as bench
+    schema, records, work, labels, cuts, min_block = common.load_workload(
+        "tpch", scale, seed
+    )
+    build = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=min_block,
+        seed=seed,
+    )
+    base = build.tree
+    print(
+        f"[sharded_ingest] {records.shape[0]} records over "
+        f"{base.n_leaves} blocks, batch={batch}, backend={backend}"
+    )
+
+    # single-stream oracle on a private replica
+    oracle = replicate_tree(base)
+    eng1 = LayoutEngine(oracle, backend=backend)
+    _warm_buckets(eng1, records, batch, 1)
+    rep1 = eng1.ingest(micro_batches(records, batch))
+    print(
+        f"[sharded_ingest] single-stream: {rep1.records_per_s:>12,.0f} rec/s"
+        f" ({rep1.n_batches} batches)"
+    )
+
+    results: dict = {
+        "n_records": int(records.shape[0]),
+        "n_blocks": int(base.n_leaves),
+        "batch": batch,
+        "backend": backend,
+        "smoke": smoke,
+        "single_stream": {
+            "records_per_s": rep1.records_per_s,
+            "wall_s": rep1.wall_s,
+        },
+        "shards": {},
+    }
+    identical = {}
+    zero_retrace = {}
+    base_pool_rate = None
+    for k in SHARD_COUNTS:
+        replica = replicate_tree(base)
+        eng = LayoutEngine(replica, backend=backend)
+        _warm_buckets(eng, records, batch, k)
+        rep = sharded_ingest(eng, records, k, batch=batch)
+        ok = (
+            np.array_equal(rep.block_sizes, rep1.block_sizes)
+            and np.array_equal(replica.leaf_lo, oracle.leaf_lo)
+            and np.array_equal(replica.leaf_hi, oracle.leaf_hi)
+            and np.array_equal(replica.leaf_cat, oracle.leaf_cat)
+            and np.array_equal(replica.leaf_adv, oracle.leaf_adv)
+        )
+        identical[k] = bool(ok)
+        zero_retrace[k] = not rep.traces
+        assert ok, f"k={k}: sharded ingest diverged from single-stream"
+        assert not rep.traces, (
+            f"k={k}: warmed sharded ingest retraced: {rep.traces}"
+        )
+        pool_rate = rep.shard_records_per_s
+        if k == 1:
+            base_pool_rate = pool_rate
+        results["shards"][str(k)] = {
+            "records_per_s_pooled": pool_rate,
+            "wall_s": rep.wall_s,
+            "merge_s": rep.merge_s,
+            "slowest_shard_s": max(rep.shard_wall_s),
+            "scaling_vs_1shard": (
+                pool_rate / base_pool_rate if base_pool_rate else 0.0
+            ),
+            "bit_identical": bool(ok),
+            "retraces": rep.traces,
+        }
+        print(
+            f"[sharded_ingest] k={k}: pooled {pool_rate:>12,.0f} rec/s | "
+            f"{pool_rate / base_pool_rate:5.2f}x vs 1-shard | "
+            f"merge {rep.merge_s * 1e3:6.1f}ms | bit-identical {ok}"
+        )
+
+    results["assertions"] = {
+        "bit_identical_all_k": all(identical.values()),
+        "zero_retraces_all_k": all(zero_retrace.values()),
+        "shard_counts": list(SHARD_COUNTS),
+    }
+    # smoke runs (CI) must not clobber the committed bench-scale numbers
+    out = OUT.with_stem(OUT.stem + "_smoke") if smoke else OUT
+    out.write_text(json.dumps(results, indent=2))
+    print(f"[sharded_ingest] wrote {out}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--backend", default="jax",
+                    choices=("numpy", "jax", "pallas"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (same bit-identity assertions)")
+    args = ap.parse_args()
+    run(scale=args.scale, seed=args.seed, smoke=args.smoke,
+        backend=args.backend, batch=args.batch)

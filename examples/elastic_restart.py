@@ -31,8 +31,8 @@ def crash_and_resume():
         r = subprocess.run(base, capture_output=True, text=True, env=_env())
         assert r.returncode == 0, r.stderr[-2000:]
         assert "resumed from step 10" in r.stdout, r.stdout[-2000:]
-        print([l for l in r.stdout.splitlines() if "resumed" in l or
-               "done" in l])
+        print([ln for ln in r.stdout.splitlines() if "resumed" in ln or
+               "done" in ln])
 
 
 def _env():

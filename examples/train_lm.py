@@ -15,7 +15,6 @@ skips non-matching blocks before any I/O.
 """
 
 import argparse
-import sys
 
 from repro.launch import train as train_driver
 

@@ -45,7 +45,6 @@ def _subsumes(cuts: CutTable, wt: qry.WorkloadTensors, schema: Schema):
     """(n_cuts, n_queries) bool: feature f subsumes query q (q ⇒ f)."""
     n_cuts, n_q = cuts.n_cuts, wt.n_queries
     out = np.zeros((n_cuts, wt.n_conjuncts), bool)
-    off = schema.cat_offsets
     for c in range(n_cuts):
         k = int(cuts.kind[c])
         if k == preds.KIND_RANGE:
@@ -88,7 +87,6 @@ def select_features(
         if live[i] < cfg.frequency_floor:
             break
         chosen.append(i)
-        newly = sub[i] & ~covered
         covered |= sub[i]
         # discount features sharing queries with the chosen one
         overlap = (sub & sub[i][None, :]).sum(axis=1)

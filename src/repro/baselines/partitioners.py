@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import predicates as preds
 from repro.core.qdtree import FrozenQdTree
 from repro.core.predicates import CutTable, Schema
 

@@ -99,13 +99,13 @@ class Woodblock:
         n = states.shape[0]
         cap = _bucket(n)
         s = np.zeros((cap, states.shape[1]), np.float32)
-        l = np.zeros((cap, legals.shape[1]), bool)
+        leg = np.zeros((cap, legals.shape[1]), bool)
         s[:n] = states
-        l[:n] = legals
-        l[n:, 0] = True
+        leg[:n] = legals
+        leg[n:, 0] = True
         self.key, sub = jax.random.split(self.key)
         a, lp, v = ppo.policy_step(
-            self.params, jnp.asarray(s), jnp.asarray(l), sub
+            self.params, jnp.asarray(s), jnp.asarray(leg), sub
         )
         return np.asarray(a)[:n], np.asarray(lp)[:n], np.asarray(v)[:n]
 

@@ -60,6 +60,20 @@ class BlockBuffers:
             self._chunks[b].append(sorted_recs[bounds[b] : bounds[b + 1]])
         self.sizes += counts
 
+    def append_block(self, bid: int, rows: np.ndarray) -> None:
+        """Append pre-routed rows to one block (sharded-merge spill path).
+
+        ``MergeCoordinator.publish`` folds each shard's per-block chunks in
+        here in shard-id order, so a contiguous record split reproduces the
+        single-stream buffer contents row-for-row.
+        """
+        if rows.shape[0] == 0:
+            return
+        if self._dtype is None:
+            self._dtype = rows.dtype
+        self._chunks[bid].append(rows.astype(self.dtype, copy=False))
+        self.sizes[bid] += rows.shape[0]
+
     @property
     def n_rows(self) -> int:
         return int(self.sizes.sum())

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.predicates import OP_EQ, OP_GE, OP_GT, OP_LE, OP_LT, Schema
+from repro.core.predicates import OP_GE, OP_GT, OP_LE, OP_LT, Schema
 from repro.core.query import AdvAtom, InAtom, Query, RangeAtom, Workload
 from repro.data import datagen
 

@@ -6,6 +6,8 @@ Public surface:
   engine_for     — the per-tree attached engine (shared plan cache)
   register_backend / get_backend / available_backends — backend registry
   PlanCache / pad_bucket / trace_counts — compiled-plan cache + counters
+  ShardIngestor / ShardState / MergeCoordinator / sharded_ingest —
+                   parallel shard routing with associative merge
 
 The lifecycle layer above (strategy-dispatched construction, versioned
 hot-swap rebuild) lives in :mod:`repro.service`.
@@ -26,6 +28,16 @@ from repro.engine.plan import (  # noqa: F401
     CompiledPlan,
     PlanCache,
     PlanKey,
+    cuts_signature,
     pad_bucket,
     trace_counts,
+)
+from repro.engine.sharded import (  # noqa: F401
+    MergeCoordinator,
+    ShardedIngestReport,
+    ShardIngestor,
+    ShardState,
+    replicate_tree,
+    shard_slices,
+    sharded_ingest,
 )

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Iterable, Iterator, Optional
 
@@ -50,6 +51,19 @@ class IngestReport:
         return self.n_records / self.wall_s if self.wall_s else 0.0
 
 
+class WorkloadTensorCache(collections.OrderedDict):
+    """LRU of tensorized workloads with its own lock.
+
+    Concurrent query threads (and generations sharing one cache across a
+    hot swap) interleave get / move_to_end / popitem — the lock keeps the
+    multi-step LRU update atomic.  Tensorization itself runs outside it.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.lock = threading.Lock()
+
+
 class LayoutEngine:
     """Backend-dispatched routing/query API with a compiled-plan cache."""
 
@@ -61,19 +75,25 @@ class LayoutEngine:
         backend: str = "jax",
         interpret: Optional[bool] = None,
         plan_cache: Optional[PlanCache] = None,
+        wt_cache: Optional[WorkloadTensorCache] = None,
     ):
         be.get_backend(backend)  # validate eagerly
         self.tree = tree
         self.backend = backend
         self.interpret = interpret
         self.plans = plan_cache if plan_cache is not None else PlanCache()
-        # LRU of tensorized workloads.  Values keep a strong reference to
-        # the workload itself: while an entry lives its id() cannot be
-        # reused by CPython, so two distinct workloads can never alias the
-        # same key (the identity check in _tensorize is belt and braces).
-        self._wt_cache: collections.OrderedDict[
-            int, tuple[qry.Workload, qry.WorkloadTensors]
-        ] = collections.OrderedDict()
+        # LRU of tensorized workloads, keyed by (cut-table content
+        # signature, workload id).  Values keep a strong reference to the
+        # workload itself: while an entry lives its id() cannot be reused
+        # by CPython, so two distinct workloads can never alias the same
+        # key (the identity check in _tensorize is belt and braces).
+        # LayoutService passes one shared dict to every generation's
+        # engine: tensorization depends only on schema + cuts, so a hot
+        # swap to a tree built from an equal cut table reuses standing
+        # workload tensors instead of re-tensorizing them.
+        self._wt_cache: WorkloadTensorCache = (
+            wt_cache if wt_cache is not None else WorkloadTensorCache()
+        )
 
     # -- dispatch -----------------------------------------------------------
     def _backend(self, override: Optional[str]) -> be.Backend:
@@ -96,16 +116,18 @@ class LayoutEngine:
 
     # -- query processing ---------------------------------------------------
     def _tensorize(self, workload: qry.Workload) -> qry.WorkloadTensors:
-        key = id(workload)
-        hit = self._wt_cache.get(key)
-        if hit is not None and hit[0] is workload:
+        key = (planlib.cuts_signature(self.tree.cuts), id(workload))
+        with self._wt_cache.lock:
+            hit = self._wt_cache.get(key)
+            if hit is not None and hit[0] is workload:
+                self._wt_cache.move_to_end(key)
+                return hit[1]
+        wt = workload.tensorize(self.tree.cuts)  # expensive: outside lock
+        with self._wt_cache.lock:
+            self._wt_cache[key] = (workload, wt)
             self._wt_cache.move_to_end(key)
-            return hit[1]
-        wt = workload.tensorize(self.tree.cuts)
-        self._wt_cache[key] = (workload, wt)
-        self._wt_cache.move_to_end(key)
-        while len(self._wt_cache) > self.WT_CACHE_CAP:
-            self._wt_cache.popitem(last=False)  # evict least-recently-used
+            while len(self._wt_cache) > self.WT_CACHE_CAP:
+                self._wt_cache.popitem(last=False)  # evict LRU entry
         return wt
 
     def query_hits(
@@ -228,12 +250,7 @@ class LayoutEngine:
             tightener.apply()
             sizes = tightener.counts.copy()
         wall = time.perf_counter() - t0
-        traces1 = planlib.trace_counts()
-        delta = {
-            k: traces1.get(k, 0) - traces0.get(k, 0)
-            for k in set(traces0) | set(traces1)
-            if traces1.get(k, 0) != traces0.get(k, 0)
-        }
+        delta = planlib.trace_delta(traces0, planlib.trace_counts())
         return IngestReport(
             n_batches=n_batches,
             n_records=n_records,

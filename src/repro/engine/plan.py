@@ -22,6 +22,7 @@ performs zero recompilation.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import threading
 from collections import Counter
@@ -29,6 +30,7 @@ from typing import Any, Callable, Hashable
 
 import numpy as np
 
+from repro.core.predicates import CutTable
 from repro.core.qdtree import FrozenQdTree
 
 LANE = 128  # TPU lane width; leaf/cut buckets must be multiples of this
@@ -46,6 +48,15 @@ def count_trace(name: str) -> None:
 
 def trace_counts() -> dict[str, int]:
     return dict(TRACE_COUNTS)
+
+
+def trace_delta(before: dict[str, int], after: dict[str, int]) -> dict:
+    """Counters that moved between two ``trace_counts`` snapshots."""
+    return {
+        k: after.get(k, 0) - before.get(k, 0)
+        for k in set(before) | set(after)
+        if after.get(k, 0) != before.get(k, 0)
+    }
 
 
 def pad_bucket(n: int, minimum: int = 1) -> int:
@@ -76,6 +87,31 @@ def tree_signature(tree: FrozenQdTree) -> int:
 def desc_version(tree: FrozenQdTree) -> int:
     """Leaf-description version; ``FrozenQdTree.tighten`` bumps it."""
     return getattr(tree, "_desc_version", 0)
+
+
+def cuts_signature(cuts: CutTable) -> int:
+    """Content hash of a cut table (plus its schema), cached on the object.
+
+    Unlike :func:`tree_signature` (an identity token), this is a *content*
+    signature: two generations whose trees were built from equal cut tables
+    share it, so workload tensorizations (which depend only on schema +
+    cuts) survive a hot swap (ROADMAP: workload-tensor reuse).
+    """
+    sig = getattr(cuts, "_cuts_sig", None)
+    if sig is None:
+        h = hashlib.blake2b(digest_size=8)
+        for a in (cuts.kind, cuts.dim, cuts.cutpoint, cuts.in_mask,
+                  cuts.adv_id):
+            h.update(np.ascontiguousarray(a).tobytes())
+        h.update(repr(tuple(
+            (a.col_a, a.op, a.col_b) for a in cuts.adv
+        )).encode())
+        h.update(repr(tuple(
+            (c.name, c.kind, c.dom) for c in cuts.schema.columns
+        )).encode())
+        sig = int.from_bytes(h.digest(), "little")
+        object.__setattr__(cuts, "_cuts_sig", sig)
+    return sig
 
 
 @dataclasses.dataclass(frozen=True)

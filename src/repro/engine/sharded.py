@@ -1,0 +1,456 @@
+"""Sharded ingestion: parallel shard routing with associative merge.
+
+The qd-tree gives a complete semantic description of every block (paper
+Sec 3.2), which makes ingestion shardable: any worker holding a replica of
+the routing plan can assign records to blocks independently, and the
+per-block aggregates — row counts, min/max tightener partials, categorical
+presence masks, advanced-cut truth bits — all merge associatively (sum /
+min / max / or over int64 and bool are exact, so the fold is bit-identical
+regardless of association or order).  Three pieces:
+
+* :class:`ShardIngestor` routes one shard's micro-batches against the
+  tree's compiled plans (shared power-of-two plan-cache buckets — a warmed
+  bucket never retraces, no matter which shard hits it) and accumulates a
+  serializable :class:`ShardState`: per-block row counts, per-leaf min/max
+  tightener partials, and (optionally) per-block row chunks — the spill
+  manifest a remote shard would ship back alongside its state.
+* :class:`MergeCoordinator` folds ShardStates associatively and publishes
+  the merged tightening into the tree — bit-identical to single-stream
+  ``LayoutEngine.ingest`` over the same records.
+* :func:`sharded_ingest` wires both onto a thread-based
+  ``concurrent.futures`` executor (ingestors close over the live engine,
+  whose compiled plans don't pickle).  ShardState itself is pure numpy —
+  it pickles and round-trips through npz (``save``/``load``) — so process
+  pools and real multi-host runs build ShardIngestors worker-side against
+  a tree replica and ship only the states back to one MergeCoordinator.
+
+``LayoutService.ingest_sharded`` is the lifecycle facade over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Executor, ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core.qdtree import FrozenQdTree, IncrementalTightener
+from repro.engine import plan as planlib
+from repro.engine.engine import IngestReport, LayoutEngine, engine_for
+
+
+@dataclasses.dataclass
+class ShardState:
+    """One shard's (or a merged set of shards') ingestion aggregates.
+
+    Pure numpy + builtins: picklable for process pools and npz-serializable
+    for cross-host shipping.  ``lo``/``hi`` use the IncrementalTightener's
+    int64 identity elements (+inf/-inf analogues), so states merge before
+    any narrowing to the tree's dtypes.
+
+    ``chunks`` maps BID → list of ``(shard_id, rows)`` buffered row chunks
+    (empty when the ingestor ran with ``collect_blocks=False``).  Chunk
+    lists concatenate under merge and are sorted by shard id at publish
+    time, so block contents are independent of merge order too.
+    """
+
+    shard_ids: tuple[int, ...]
+    n_leaves: int
+    counts: np.ndarray  # (L,) int64 rows routed per block
+    lo: np.ndarray  # (L, D) int64 running minima
+    hi: np.ndarray  # (L, D) int64 running maxima (exclusive)
+    cat: np.ndarray  # (L, bits) bool observed categorical values
+    adv: np.ndarray  # (L, A, 2) bool observed advanced-cut truth bits
+    n_batches: int
+    n_records: int
+    chunks: dict[int, list[tuple[int, np.ndarray]]]
+    wall_s: float = 0.0
+
+    def merge(self, other: "ShardState") -> "ShardState":
+        """Associative, commutative fold of two shard states.
+
+        Every aggregate is an exact elementwise monoid op on int64/bool,
+        so ``merge(merge(a, b), c)`` equals ``merge(a, merge(b, c))``
+        bit-identically, and the tightening aggregates commute as well.
+        """
+        if self.n_leaves != other.n_leaves or self.lo.shape != other.lo.shape:
+            raise ValueError("cannot merge shard states of different trees")
+        overlap = set(self.shard_ids) & set(other.shard_ids)
+        if overlap:
+            raise ValueError(f"shards merged twice: {sorted(overlap)}")
+        chunks: dict[int, list[tuple[int, np.ndarray]]] = {
+            b: list(c) for b, c in self.chunks.items()
+        }
+        for b, c in other.chunks.items():
+            chunks.setdefault(b, []).extend(c)
+        return ShardState(
+            shard_ids=tuple(sorted(self.shard_ids + other.shard_ids)),
+            n_leaves=self.n_leaves,
+            counts=self.counts + other.counts,
+            lo=np.minimum(self.lo, other.lo),
+            hi=np.maximum(self.hi, other.hi),
+            cat=self.cat | other.cat,
+            adv=self.adv | other.adv,
+            n_batches=self.n_batches + other.n_batches,
+            n_records=self.n_records + other.n_records,
+            chunks=chunks,
+            wall_s=max(self.wall_s, other.wall_s),
+        )
+
+    # -- serialization (cross-host shipping) --------------------------------
+    def save(self, path: str) -> None:
+        arrays = {
+            "shard_ids": np.asarray(self.shard_ids, np.int64),
+            "counts": self.counts,
+            "lo": self.lo,
+            "hi": self.hi,
+            "cat": self.cat,
+            "adv": self.adv,
+            "meta": np.asarray(
+                [self.n_leaves, self.n_batches, self.n_records], np.int64
+            ),
+            "wall_s": np.asarray(self.wall_s),
+        }
+        for b, clist in self.chunks.items():
+            for sid, rows in clist:
+                arrays[f"chunk_{int(sid)}_{int(b)}"] = rows
+        np.savez_compressed(path, **arrays)
+
+    @staticmethod
+    def load(path: str) -> "ShardState":
+        z = np.load(path, allow_pickle=False)
+        chunks: dict[int, list[tuple[int, np.ndarray]]] = {}
+        for key in z.files:
+            if key.startswith("chunk_"):
+                _, sid, b = key.split("_")
+                chunks.setdefault(int(b), []).append((int(sid), z[key]))
+        for clist in chunks.values():
+            clist.sort(key=lambda c: c[0])
+        meta = z["meta"]
+        return ShardState(
+            shard_ids=tuple(int(s) for s in z["shard_ids"]),
+            n_leaves=int(meta[0]),
+            counts=z["counts"],
+            lo=z["lo"],
+            hi=z["hi"],
+            cat=z["cat"],
+            adv=z["adv"],
+            n_batches=int(meta[1]),
+            n_records=int(meta[2]),
+            chunks=chunks,
+            wall_s=float(z["wall_s"]),
+        )
+
+
+class ShardIngestor:
+    """Routes one shard's micro-batches against a replicated plan.
+
+    Holds no shared mutable state: routing reads the (immutable) frozen
+    topology through the engine's plan cache, and all accumulation happens
+    in a private :class:`IncrementalTightener` that is *never applied* to
+    the tree — its partials are extracted into the returned ShardState.
+    """
+
+    def __init__(
+        self,
+        layout: FrozenQdTree | LayoutEngine,
+        shard_id: int = 0,
+        backend: Optional[str] = None,
+        collect_blocks: bool = False,
+    ):
+        self.engine = (
+            layout
+            if isinstance(layout, LayoutEngine)
+            else engine_for(layout)
+        )
+        self.shard_id = int(shard_id)
+        self.backend = backend
+        self.collect_blocks = collect_blocks
+
+    def run(self, batches: Iterable[np.ndarray]) -> ShardState:
+        """Route every micro-batch; return this shard's aggregates."""
+        from repro.data.blocks import BlockBuffers
+
+        tree = self.engine.tree
+        tightener = IncrementalTightener(tree)
+        # private per-shard buffers reuse the exact routing-order-preserving
+        # scatter of the single-stream path (BlockBuffers.append)
+        spill = (
+            BlockBuffers.for_tree(tree) if self.collect_blocks else None
+        )
+        n_batches = n_records = 0
+        t0 = time.perf_counter()
+        for batch in batches:
+            if batch.shape[0] == 0:
+                continue
+            bids = self.engine.route(batch, backend=self.backend)
+            tightener.update(batch, bids)
+            if spill is not None:
+                spill.append(batch, bids)
+            n_batches += 1
+            n_records += batch.shape[0]
+        chunks = (
+            {}
+            if spill is None
+            else {
+                int(b): [(self.shard_id, spill.block(int(b)))]
+                for b in np.nonzero(spill.sizes)[0]
+            }
+        )
+        return ShardState(
+            shard_ids=(self.shard_id,),
+            n_leaves=tree.n_leaves,
+            counts=tightener.counts,
+            lo=tightener.lo,
+            hi=tightener.hi,
+            cat=tightener.cat,
+            adv=tightener.adv,
+            n_batches=n_batches,
+            n_records=n_records,
+            chunks=chunks,
+            wall_s=time.perf_counter() - t0,
+        )
+
+
+class MergeCoordinator:
+    """Folds ShardStates and publishes the merged tightening into a tree."""
+
+    def __init__(self, tree: FrozenQdTree):
+        self.tree = tree
+        self._state: Optional[ShardState] = None
+
+    @property
+    def merged(self) -> ShardState:
+        if self._state is None:
+            raise ValueError("no shard states merged yet")
+        return self._state
+
+    def add(self, state: ShardState) -> ShardState:
+        self._state = state if self._state is None else self._state.merge(state)
+        return self._state
+
+    def publish(self, buffers=None) -> np.ndarray:
+        """Apply the merged tightening to the tree; returns block sizes.
+
+        Reuses ``IncrementalTightener.apply`` verbatim, so the published
+        leaf descriptions — and the description-version bump that evicts
+        stale query plans — are exactly what single-stream ``ingest``
+        would have produced.  ``buffers`` is forwarded to
+        :meth:`fill_buffers`.
+        """
+        state = self.merged
+        t = IncrementalTightener(self.tree)
+        t.lo, t.hi = state.lo, state.hi
+        t.cat, t.adv = state.cat, state.adv
+        t.counts = state.counts
+        t.apply()
+        if buffers is not None:
+            self.fill_buffers(buffers)
+        return state.counts.copy()
+
+    def fill_buffers(self, buffers) -> None:
+        """Drain the merged spill chunks into ``buffers`` (a BlockBuffers).
+
+        Chunks are folded in shard-id order, so with a contiguous record
+        split the buffered blocks match single-stream ingestion
+        row-for-row.  Does not touch the tree — usable for what-if runs
+        alongside ``tighten=False``.
+        """
+        state = self.merged
+        for b in sorted(state.chunks):
+            for _, rows in sorted(state.chunks[b], key=lambda c: c[0]):
+                buffers.append_block(b, rows)
+
+
+@dataclasses.dataclass
+class ShardedIngestReport(IngestReport):
+    """IngestReport plus shard-parallel accounting."""
+
+    n_shards: int
+    shard_wall_s: tuple[float, ...]  # per-shard routing wall clock
+    merge_s: float  # associative fold + publish
+
+    @property
+    def shard_records_per_s(self) -> float:
+        """Aggregate routing throughput of the shard pool (merge excluded)."""
+        slowest = max(self.shard_wall_s) if self.shard_wall_s else 0.0
+        return self.n_records / slowest if slowest else 0.0
+
+
+def shard_slices(records: np.ndarray, n_shards: int) -> list[np.ndarray]:
+    """Contiguous record split — shard i gets the i-th slice of the stream."""
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    return np.array_split(records, n_shards)
+
+
+def micro_batches(records: np.ndarray, batch: int):
+    for s in range(0, records.shape[0], batch):
+        yield records[s : s + batch]
+
+
+def warm_sizes(n_rows: int, n_shards: int, batch: int) -> set[int]:
+    """Every distinct batch size a sharded run will route.
+
+    Derived from :func:`shard_slices` (floor/ceil contiguous split) +
+    :func:`micro_batches` (fixed ``batch`` plus a tail remainder), so
+    callers can pre-warm exactly the padding buckets the run will hit —
+    the zero-retrace warmup used by ``launch/ingest.py`` and
+    ``benchmarks/sharded_ingest.py``.
+    """
+    slice_sizes = {n_rows // n_shards}
+    if n_rows % n_shards:
+        slice_sizes.add(n_rows // n_shards + 1)
+    sizes = {min(batch, s) for s in slice_sizes}
+    sizes |= {s % batch for s in slice_sizes}
+    return {s for s in sizes if s}
+
+
+def _run_shard(ingestor: ShardIngestor, batches) -> ShardState:
+    """Module-level executor target (keeps futures introspectable)."""
+    return ingestor.run(batches)
+
+
+def sharded_ingest(
+    layout: FrozenQdTree | LayoutEngine,
+    records: np.ndarray,
+    n_shards: int,
+    batch: int = 2048,
+    executor: Optional[Executor] = None,
+    collect_blocks: bool = False,
+    buffers=None,  # data.blocks.BlockBuffers | None
+    tighten: bool = True,
+    backend: Optional[str] = None,
+    lock=None,  # context manager guarding the publish step
+) -> ShardedIngestReport:
+    """Shard ``records`` across parallel ingestors and merge associatively.
+
+    Contiguously splits the stream into ``n_shards``, runs one
+    :class:`ShardIngestor` per shard on ``executor`` (a private thread pool
+    by default), folds the resulting ShardStates through a
+    :class:`MergeCoordinator`, and (when ``tighten``) publishes the merged
+    tightening — bit-identical to ``LayoutEngine.ingest`` over the same
+    records for every k.  With ``tighten=False`` the tree is left
+    untouched (same contract as ``ingest``): buffers still fill and the
+    merged counts/partials are still computed and reported.
+
+    ``executor`` must be thread-based: ingestors close over the live
+    engine (compiled plans don't pickle).  For process pools or real
+    multi-host runs, build the ShardIngestors worker-side against a tree
+    replica and ship the (picklable, npz-serializable) ShardStates back
+    to one MergeCoordinator instead.
+    """
+    engine = (
+        layout if isinstance(layout, LayoutEngine) else engine_for(layout)
+    )
+    if isinstance(executor, ProcessPoolExecutor):
+        raise TypeError(
+            "sharded_ingest needs a thread-based executor: ingestors close "
+            "over the live engine, whose compiled plans don't pickle. For "
+            "process pools / multi-host, run ShardIngestors worker-side "
+            "against a tree replica and ship ShardStates (pickle/npz) back "
+            "to one MergeCoordinator."
+        )
+    if buffers is not None:
+        collect_blocks = True
+    traces0 = planlib.trace_counts()
+    ingestors = [
+        ShardIngestor(
+            engine, shard_id=i, backend=backend,
+            collect_blocks=collect_blocks,
+        )
+        for i in range(n_shards)
+    ]
+    shard_batches = [
+        micro_batches(part, batch)
+        for part in shard_slices(records, n_shards)
+    ]
+    t0 = time.perf_counter()
+    if executor is None:
+        with ThreadPoolExecutor(max_workers=n_shards) as pool:
+            states = list(
+                pool.map(_run_shard, ingestors, shard_batches)
+            )
+    else:
+        states = list(
+            executor.map(_run_shard, ingestors, shard_batches)
+        )
+    t_merge = time.perf_counter()
+    coordinator = MergeCoordinator(engine.tree)
+    for state in states:
+        coordinator.add(state)
+    if tighten:
+        if lock is not None:
+            with lock:
+                sizes = coordinator.publish(buffers=buffers)
+        else:
+            sizes = coordinator.publish(buffers=buffers)
+    else:
+        if buffers is not None:
+            coordinator.fill_buffers(buffers)
+        sizes = coordinator.merged.counts.copy()
+    t1 = time.perf_counter()
+    delta = planlib.trace_delta(traces0, planlib.trace_counts())
+    merged = coordinator.merged
+    return ShardedIngestReport(
+        n_batches=merged.n_batches,
+        n_records=merged.n_records,
+        block_sizes=sizes,
+        wall_s=t1 - t0,
+        backend=backend or engine.backend,
+        plan_cache=engine.plans.stats(),
+        traces=delta,
+        n_shards=n_shards,
+        shard_wall_s=tuple(s.wall_s for s in states),
+        merge_s=t1 - t_merge,
+    )
+
+
+def replicate_tree(tree: FrozenQdTree) -> FrozenQdTree:
+    """A routing-identical replica with private leaf descriptions.
+
+    The copy a shard host (or a what-if run) would hold: topology and cut
+    table are shared (immutable), leaf descriptions are cloned so the
+    replica can be tightened without touching the original.  The replica
+    gets its own tree signature, hence its own plan-cache entries.
+    """
+    return FrozenQdTree(
+        schema=tree.schema,
+        cuts=tree.cuts,
+        cut_id=tree.cut_id.copy(),
+        left=tree.left.copy(),
+        right=tree.right.copy(),
+        leaf_bid=tree.leaf_bid.copy(),
+        leaf_lo=tree.leaf_lo.copy(),
+        leaf_hi=tree.leaf_hi.copy(),
+        leaf_cat=tree.leaf_cat.copy(),
+        leaf_adv=tree.leaf_adv.copy(),
+        depth=tree.depth,
+    )
+
+
+def states_bit_identical(a: ShardState, b: ShardState) -> bool:
+    """True iff two states' tightening aggregates are bit-identical."""
+    return (
+        bool(np.array_equal(a.counts, b.counts))
+        and bool(np.array_equal(a.lo, b.lo))
+        and bool(np.array_equal(a.hi, b.hi))
+        and bool(np.array_equal(a.cat, b.cat))
+        and bool(np.array_equal(a.adv, b.adv))
+    )
+
+
+__all__ = [
+    "MergeCoordinator",
+    "ShardIngestor",
+    "ShardState",
+    "ShardedIngestReport",
+    "micro_batches",
+    "replicate_tree",
+    "shard_slices",
+    "sharded_ingest",
+    "states_bit_identical",
+    "warm_sizes",
+]

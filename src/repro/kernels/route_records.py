@@ -204,8 +204,8 @@ def locate_leaf_pallas(
     interpret: bool,
 ) -> jnp.ndarray:
     m, c = m_mat.shape
-    l = pathpos.shape[1]
-    grid = (m // tile_m, l // tile_l)
+    n_leaf = pathpos.shape[1]
+    grid = (m // tile_m, n_leaf // tile_l)
     out = pl.pallas_call(
         _locate_leaf_kernel,
         grid=grid,

@@ -48,8 +48,10 @@ def batch_sizes(n_rows: int, mean_batch: int, seed: int) -> list[int]:
     rng = np.random.default_rng(seed)
     sizes: list[int] = []
     left = n_rows
+    lo = max(mean_batch // 2, 1)
+    hi = max(mean_batch * 3 // 2, lo + 1)  # keep lo < hi for mean_batch=1
     while left > 0:
-        b = int(rng.integers(max(mean_batch // 2, 1), mean_batch * 3 // 2))
+        b = int(rng.integers(lo, hi))
         sizes.append(min(b, left))
         left -= sizes[-1]
     return sizes
@@ -74,6 +76,9 @@ def main() -> None:
                     help="layout construction strategy "
                          "(repro.service builder registry)")
     ap.add_argument("--min-block", type=int, default=600)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="ingest with N parallel shard ingestors "
+                         "(associative merge; bit-identical to --shards 1)")
     ap.add_argument("--rebuild", action="store_true",
                     help="after ingest, rebuild on the full corpus and "
                          "hot-swap if the Eq.1 skip rate improves")
@@ -106,11 +111,27 @@ def main() -> None:
     # warmup: compile the routing plan for every padding bucket the jittered
     # stream will produce (incl. the tail remainder), so the ingest loop
     # itself runs fully warm — zero retraces
-    sizes = batch_sizes(records.shape[0], args.batch, args.seed)
+    if args.shards > 1:
+        from repro.engine.sharded import warm_sizes
+
+        sizes = sorted(warm_sizes(records.shape[0], args.shards, args.batch))
+    else:
+        sizes = batch_sizes(records.shape[0], args.batch, args.seed)
     buckets = {pad_bucket(s, 64) for s in sizes}
     for m in sorted(min(b, records.shape[0]) for b in buckets):
         engine.route(records[:m])
-    report = engine.ingest(micro_batches(records, sizes), buffers=buffers)
+    if args.shards > 1:
+        report = service.ingest_sharded(
+            records, args.shards, batch=args.batch, buffers=buffers
+        )
+        slowest = max(report.shard_wall_s)
+        print(
+            f"[ingest] {args.shards} shards routed in {slowest:.2f}s "
+            f"(slowest shard) -> {report.shard_records_per_s:,.0f} rec/s "
+            f"pooled; merge+publish {report.merge_s*1e3:.1f}ms"
+        )
+    else:
+        report = engine.ingest(micro_batches(records, sizes), buffers=buffers)
     print(
         f"[ingest] {report.n_records} records / {report.n_batches} "
         f"micro-batches in {report.wall_s:.2f}s -> "
@@ -158,6 +179,7 @@ def main() -> None:
         "n_batches": report.n_batches,
         "backend": report.backend,
         "strategy": args.strategy,
+        "n_shards": args.shards,
         "plan_cache": report.plan_cache,
         "ingest_traces": report.traces,
         "scanned_fraction": stats.scanned_fraction,

@@ -108,7 +108,6 @@ def softmax_cross_entropy(
     """
     lg = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(lg, axis=-1)
-    v = lg.shape[-1]
     hit = labels[..., None] == jax.lax.broadcasted_iota(
         jnp.int32, lg.shape, lg.ndim - 1
     )

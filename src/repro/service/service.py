@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from concurrent.futures import Executor
 from typing import Callable, Iterable, Optional
 
 import numpy as np
@@ -34,6 +35,7 @@ import numpy as np
 from repro.core import query as qry
 from repro.core.qdtree import FrozenQdTree
 from repro.engine import LayoutEngine, PlanCache
+from repro.engine.engine import WorkloadTensorCache
 from repro.engine import plan as planlib
 from repro.engine.plan import PlanKey
 from repro.service.builders import LayoutBuild, build_layout
@@ -86,6 +88,10 @@ class LayoutService:
         self.backend = backend
         self.interpret = interpret
         self.plans = plan_cache if plan_cache is not None else PlanCache()
+        # one workload-tensor LRU for every generation: entries key on the
+        # cut-table *content* signature, so a hot swap to a tree built from
+        # an equal cut table keeps standing workloads tensorized
+        self._wt_cache = WorkloadTensorCache()
         self._lock = threading.Lock()
         self._gen = 0
         self._versions: dict[int, LayoutVersion] = {}
@@ -115,6 +121,7 @@ class LayoutService:
             backend=self.backend,
             interpret=self.interpret,
             plan_cache=self.plans,
+            wt_cache=self._wt_cache,
         )
         self._gen += 1
         v = LayoutVersion(generation=self._gen, build=build, engine=eng)
@@ -169,6 +176,34 @@ class LayoutService:
 
     def ingest(self, batches: Iterable[np.ndarray], **kw):
         return self._live.engine.ingest(batches, **kw)
+
+    def ingest_sharded(
+        self,
+        records: np.ndarray,
+        n_shards: int,
+        batch: int = 2048,
+        executor: Optional[Executor] = None,
+        **kw,
+    ):
+        """Shard-parallel ingestion into the live tree (engine.sharded).
+
+        Splits ``records`` contiguously across ``n_shards`` ShardIngestors
+        (a private thread pool by default, or any thread-based
+        ``concurrent.futures`` executor — see ``sharded_ingest`` for the
+        process-pool/multi-host recipe), folds their ShardStates
+        associatively, and publishes the merged
+        tightening under the service lock — the description-version bump
+        evicts stale per-signature query plans exactly as a single-stream
+        ``ingest`` would, so readers hot-cut to the tightened descriptions
+        atomically.  Bit-identical to ``ingest`` over the same records.
+        """
+        from repro.engine.sharded import sharded_ingest
+
+        live = self._live  # consistent engine/tree view for the whole run
+        return sharded_ingest(
+            live.engine, records, n_shards, batch=batch,
+            executor=executor, lock=self._lock, **kw,
+        )
 
     # -- lifecycle: swap / rollback / release --------------------------------
     def swap(self, build: LayoutBuild) -> int:

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import greedy, query as qry, predicates as preds
+from repro.core import greedy, query as qry
 from repro.data.blocks import BlockStore
 from repro.data.pipeline import (
     ElasticBlockScheduler,

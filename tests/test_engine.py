@@ -303,7 +303,7 @@ def test_ingest_streams_into_buffers_and_store(tmp_path):
     np.testing.assert_array_equal(frozen.leaf_lo, fresh.leaf_lo)
     np.testing.assert_array_equal(frozen.leaf_hi, fresh.leaf_hi)
     # persisted store round-trips
-    store = buffers.write_store(tmp_path / "store", frozen)
+    buffers.write_store(tmp_path / "store", frozen)
     reopened = BlockStore.open(tmp_path / "store")
     np.testing.assert_array_equal(reopened.sizes, sizes)
     np.testing.assert_array_equal(

@@ -7,14 +7,12 @@
 """
 
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # tier-1 containers without hypothesis
     from tests._hypothesis_shim import given, settings, st
 
 from repro.core import predicates as preds
-from repro.core import query as qry
 from repro.core.predicates import Column, CutTableBuilder, Schema
 from repro.core.qdtree import FrozenQdTree, child_descs, root_desc, singleton_tree
 
@@ -96,11 +94,11 @@ def test_routing_semantic_description_and_completeness(seed):
     sbids = frozen.route(sample)
     for rec, bid in zip(sample, sbids):
         hits = [
-            l
-            for l in range(frozen.n_leaves)
+            b
+            for b in range(frozen.n_leaves)
             if desc_satisfied(
-                rec, frozen.leaf_lo[l], frozen.leaf_hi[l],
-                frozen.leaf_cat[l], frozen.leaf_adv[l], schema, cuts,
+                rec, frozen.leaf_lo[b], frozen.leaf_hi[b],
+                frozen.leaf_cat[b], frozen.leaf_adv[b], schema, cuts,
             )
         ]
         assert hits == [int(bid)]

@@ -151,9 +151,83 @@ def test_workload_tensor_cache_is_lru():
         eng.query_hits(w, backend="numpy")
     assert len(eng._wt_cache) == eng.WT_CACHE_CAP  # bounded, not cleared
     assert any(entry[0] is keep for entry in eng._wt_cache.values())
-    # aliasing-impossible invariant: every key is the id of the workload the
-    # entry strongly references (so that id cannot be reused while cached)
-    assert all(k == id(entry[0]) for k, entry in eng._wt_cache.items())
+    # aliasing-impossible invariant: every key carries the id of the
+    # workload the entry strongly references (so that id cannot be reused
+    # while cached), plus the cut-table content signature
+    assert all(
+        k == (planlib.cuts_signature(build.tree.cuts), id(entry[0]))
+        for k, entry in eng._wt_cache.items()
+    )
+
+
+def test_workload_tensor_cache_safe_under_concurrent_queries():
+    """The shared LRU interleaves get/move_to_end/popitem across query
+    threads; the cache lock must keep every sequence atomic (no KeyError,
+    bounded size)."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    _, records, cuts, work = _setup(41)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    schema = svc.tree.schema
+    want = svc.query_hits(work, backend="numpy")
+
+    def hammer(i):
+        local_rng = np.random.default_rng(1000 + i)
+        for _ in range(30):  # churn well past WT_CACHE_CAP
+            w = qry.Workload(
+                schema,
+                tuple(random_query(schema, local_rng) for _ in range(2)),
+            )
+            svc.query_hits(w, backend="numpy")
+            np.testing.assert_array_equal(
+                svc.query_hits(work, backend="numpy"), want
+            )
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        for f in [pool.submit(hammer, i) for i in range(8)]:
+            f.result()  # surfaces KeyError/corruption from any thread
+    assert len(svc.engine._wt_cache) <= svc.engine.WT_CACHE_CAP
+
+
+def test_workload_tensors_survive_hot_swap():
+    """ROADMAP: a swap to a tree built from an equal cut table must not
+    re-tensorize standing workloads (shared cache keyed by cut-table
+    content signature)."""
+    _, records, cuts, work = _setup(37)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    wt_before = svc.engine._tensorize(work)
+    old_engine = svc.engine
+    report = svc.rebuild(
+        records, work, cuts=cuts, min_block=20, swap="always"
+    )
+    assert report.swapped and svc.engine is not old_engine
+    # the new generation's engine serves the SAME tensorization object
+    assert svc.engine._tensorize(work) is wt_before
+    # and batched routing through it matches a from-scratch tensorize
+    want = work.tensorize(svc.tree.cuts)
+    got = svc.query_hits(work, backend="numpy")
+    np.testing.assert_array_equal(
+        got, svc.engine.query_hits(want, backend="numpy")
+    )
+    # a *different* cut table gets its own entry (no false sharing): an
+    # engine over a tree built from other cuts, sharing the same cache,
+    # must tensorize the same workload afresh
+    other_cuts = work.candidate_cuts(max_adv=0)
+    assert planlib.cuts_signature(other_cuts) != planlib.cuts_signature(
+        svc.tree.cuts
+    )
+    other_build = build_layout(
+        records, work, strategy="greedy", cuts=other_cuts, min_block=30
+    )
+    other_eng = LayoutEngine(
+        other_build.tree, wt_cache=svc.engine._wt_cache
+    )
+    assert other_eng._tensorize(work) is not wt_before
+    assert svc.engine._tensorize(work) is wt_before  # original entry kept
 
 
 # ---------------------------------------------------------------------------

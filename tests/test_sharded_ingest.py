@@ -1,0 +1,284 @@
+"""Sharded-ingestion tests: ShardState merge is associative and
+commutative, k-shard ingest is bit-identical to single-stream
+``LayoutEngine.ingest`` (tightened leaf descriptions, per-block counts,
+and buffered block contents), ShardState ships across processes/hosts
+(pickle + npz), and the LayoutService facade publishes atomically."""
+
+import pickle
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers without hypothesis
+    from tests._hypothesis_shim import given, settings, st
+
+from repro.core import query as qry
+from repro.data.blocks import BlockBuffers
+from repro.engine import LayoutEngine, replicate_tree, sharded_ingest
+from repro.engine.sharded import (
+    MergeCoordinator,
+    ShardIngestor,
+    ShardState,
+    micro_batches,
+    shard_slices,
+    states_bit_identical,
+)
+from repro.service import LayoutService
+from tests.test_qdtree import random_tree, small_setup
+from tests.test_query import random_query
+
+
+def _frozen(seed=0):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    tree = random_tree(schema, cuts, records, rng)
+    return schema, records, cuts, tree.freeze()
+
+
+def _shard_states(base, records, bounds, batch=41, collect_blocks=False):
+    """One ShardState per contiguous [bounds[i], bounds[i+1]) slice."""
+    states = []
+    for i in range(len(bounds) - 1):
+        part = records[bounds[i] : bounds[i + 1]]
+        ing = ShardIngestor(
+            LayoutEngine(replicate_tree(base), backend="numpy"),
+            shard_id=i,
+            collect_blocks=collect_blocks,
+        )
+        states.append(ing.run(micro_batches(part, batch)))
+    return states
+
+
+# ---------------------------------------------------------------------------
+# Merge algebra
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_merge_associative_and_commutative(data):
+    _, records, _, base = _frozen(0)
+    n = records.shape[0]
+    # random 3-way contiguous partition (empty shards allowed)
+    c1 = data.draw(st.integers(min_value=0, max_value=n), label="cut1")
+    c2 = data.draw(st.integers(min_value=0, max_value=n), label="cut2")
+    lo_cut, hi_cut = sorted((c1, c2))
+    a, b, c = _shard_states(base, records, [0, lo_cut, hi_cut, n])
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    assert states_bit_identical(left, right)
+    assert left.shard_ids == right.shard_ids == (0, 1, 2)
+    assert states_bit_identical(a.merge(b), b.merge(a))
+    assert left.n_records == n
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_kshard_ingest_bit_identical_to_single_stream(data):
+    seed = data.draw(st.integers(min_value=0, max_value=5), label="seed")
+    k = data.draw(st.sampled_from([1, 2, 3, 4, 8]), label="k")
+    batch = data.draw(st.sampled_from([17, 64, 500]), label="batch")
+    _, records, _, base = _frozen(seed)
+
+    oracle = replicate_tree(base)
+    rep1 = LayoutEngine(oracle, backend="numpy").ingest(
+        micro_batches(records, batch)
+    )
+    replica = replicate_tree(base)
+    repk = sharded_ingest(
+        LayoutEngine(replica, backend="numpy"), records, k, batch=batch
+    )
+    np.testing.assert_array_equal(repk.block_sizes, rep1.block_sizes)
+    np.testing.assert_array_equal(replica.leaf_lo, oracle.leaf_lo)
+    np.testing.assert_array_equal(replica.leaf_hi, oracle.leaf_hi)
+    np.testing.assert_array_equal(replica.leaf_cat, oracle.leaf_cat)
+    np.testing.assert_array_equal(replica.leaf_adv, oracle.leaf_adv)
+    assert repk.n_shards == k and len(repk.shard_wall_s) == k
+
+
+# ---------------------------------------------------------------------------
+# Deterministic end-to-end paths
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_sharded_buffers_match_single_stream(k):
+    """Contiguous split + shard-id-ordered merge reproduces the exact
+    buffered block contents of single-stream ingestion, row for row."""
+    _, records, _, base = _frozen(7)
+    oracle = replicate_tree(base)
+    buf1 = BlockBuffers.for_tree(oracle)
+    LayoutEngine(oracle, backend="numpy").ingest(
+        micro_batches(records, 53), buffers=buf1
+    )
+    replica = replicate_tree(base)
+    bufk = BlockBuffers.for_tree(replica)
+    sharded_ingest(
+        LayoutEngine(replica, backend="numpy"), records, k, batch=53,
+        buffers=bufk,
+    )
+    np.testing.assert_array_equal(bufk.sizes, buf1.sizes)
+    for b in range(base.n_leaves):
+        np.testing.assert_array_equal(bufk.block(b), buf1.block(b))
+
+
+def test_shard_slices_cover_stream_contiguously():
+    _, records, _, _ = _frozen(1)
+    for k in (1, 3, 7):
+        parts = shard_slices(records, k)
+        assert len(parts) == k
+        np.testing.assert_array_equal(np.concatenate(parts), records)
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_slices(records, 0)
+
+
+def test_shard_state_pickles_and_roundtrips_npz(tmp_path):
+    """Process-pool and cross-host shipping: pure-numpy state survives
+    pickle and npz round trips bit-identically, chunks included."""
+    _, records, _, base = _frozen(3)
+    (state,) = _shard_states(
+        base, records, [0, records.shape[0]], collect_blocks=True
+    )
+    clone = pickle.loads(pickle.dumps(state))
+    assert states_bit_identical(clone, state)
+
+    path = str(tmp_path / "shard.npz")
+    state.save(path)
+    loaded = ShardState.load(path)
+    assert states_bit_identical(loaded, state)
+    assert loaded.shard_ids == state.shard_ids
+    assert loaded.n_records == state.n_records
+    assert sorted(loaded.chunks) == sorted(state.chunks)
+    for b in state.chunks:
+        for (sid_a, rows_a), (sid_b, rows_b) in zip(
+            state.chunks[b], loaded.chunks[b]
+        ):
+            assert sid_a == sid_b
+            np.testing.assert_array_equal(rows_a, rows_b)
+
+
+def test_merge_rejects_duplicates_and_mismatched_trees():
+    _, records, _, base = _frozen(5)
+    n = records.shape[0]
+    a, b = _shard_states(base, records, [0, n // 2, n])
+    with pytest.raises(ValueError, match="merged twice"):
+        a.merge(a)
+    _, records9, _, other = _frozen(9)
+    (c,) = _shard_states(other, records9, [0, records9.shape[0]])
+    if c.n_leaves != a.n_leaves or c.lo.shape != a.lo.shape:
+        with pytest.raises(ValueError, match="different trees"):
+            a.merge(c)
+    coord = MergeCoordinator(base)
+    with pytest.raises(ValueError, match="no shard states"):
+        _ = coord.merged
+
+
+def test_coordinator_publish_matches_engine_tighten():
+    """publish() goes through IncrementalTightener.apply: descriptions and
+    the desc-version bump are exactly the single-stream ones."""
+    from repro.engine import plan as planlib
+
+    _, records, _, base = _frozen(11)
+    oracle = replicate_tree(base)
+    bids = oracle.route(records)
+    oracle.tighten(records, bids)
+
+    replica = replicate_tree(base)
+    v0 = planlib.desc_version(replica)
+    coord = MergeCoordinator(replica)
+    for s in _shard_states(base, records, [0, 140, 300, records.shape[0]]):
+        coord.add(s)
+    sizes = coord.publish()
+    assert planlib.desc_version(replica) == v0 + 1
+    np.testing.assert_array_equal(
+        sizes, np.bincount(bids, minlength=base.n_leaves)
+    )
+    np.testing.assert_array_equal(replica.leaf_lo, oracle.leaf_lo)
+    np.testing.assert_array_equal(replica.leaf_hi, oracle.leaf_hi)
+    np.testing.assert_array_equal(replica.leaf_cat, oracle.leaf_cat)
+    np.testing.assert_array_equal(replica.leaf_adv, oracle.leaf_adv)
+
+
+def test_service_ingest_sharded_hot_publishes():
+    schema, records, cuts, _ = _frozen(13)
+    rng = np.random.default_rng(13)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(4))
+    )
+    svc = LayoutService.build(
+        records, work, strategy="greedy", backend="numpy", cuts=cuts,
+        min_block=30,
+    )
+    svc2 = LayoutService.build(
+        records, work, strategy="greedy", backend="numpy", cuts=cuts,
+        min_block=30,
+    )
+    hits_before = svc.query_hits(work, backend="numpy")
+    rep = svc.ingest_sharded(records, 4, batch=97)
+    rep2 = svc2.ingest(micro_batches(records, 97))
+    assert rep.n_records == rep2.n_records == records.shape[0]
+    np.testing.assert_array_equal(rep.block_sizes, rep2.block_sizes)
+    np.testing.assert_array_equal(svc.tree.leaf_lo, svc2.tree.leaf_lo)
+    np.testing.assert_array_equal(svc.tree.leaf_hi, svc2.tree.leaf_hi)
+    # the tightening was published: query plans refreshed, hits only prune
+    hits_after = svc.query_hits(work, backend="numpy")
+    assert (hits_after <= hits_before).all()
+    np.testing.assert_array_equal(
+        hits_after, svc2.query_hits(work, backend="numpy")
+    )
+    assert svc.generation == 1  # tighten publishes in place, no new gen
+
+
+def test_sharded_ingest_tighten_false_leaves_tree_untouched():
+    """Same contract as engine.ingest(tighten=False): buffers fill and
+    counts report, but descriptions and desc version don't move."""
+    from repro.engine import plan as planlib
+
+    _, records, _, base = _frozen(19)
+    replica = replicate_tree(base)
+    lo0, hi0 = replica.leaf_lo.copy(), replica.leaf_hi.copy()
+    v0 = planlib.desc_version(replica)
+    buf = BlockBuffers.for_tree(replica)
+    rep = sharded_ingest(
+        LayoutEngine(replica, backend="numpy"), records, 3, batch=71,
+        buffers=buf, tighten=False,
+    )
+    bids = base.route(records)
+    np.testing.assert_array_equal(
+        rep.block_sizes, np.bincount(bids, minlength=base.n_leaves)
+    )
+    np.testing.assert_array_equal(buf.sizes, rep.block_sizes)
+    np.testing.assert_array_equal(replica.leaf_lo, lo0)
+    np.testing.assert_array_equal(replica.leaf_hi, hi0)
+    assert planlib.desc_version(replica) == v0
+
+
+def test_sharded_ingest_zero_retraces_when_warm():
+    """Every shard reuses the same compiled plans: with the padding
+    buckets pre-warmed, a k-shard run performs zero retraces."""
+    from repro.engine import plan as planlib
+
+    _, records, _, base = _frozen(17)
+    replica = replicate_tree(base)
+    eng = LayoutEngine(replica, backend="jax")
+    n, k, batch = records.shape[0], 4, 64
+    for size in {batch, (n // k) % batch, (n // k + 1) % batch} - {0}:
+        eng.route(records[:size])
+    traces0 = sum(planlib.trace_counts().values())
+    rep = sharded_ingest(eng, records, k, batch=batch)
+    assert sum(planlib.trace_counts().values()) == traces0
+    assert rep.traces == {}
+
+
+# ---------------------------------------------------------------------------
+# launch/ingest CLI helpers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mean_batch", [1, 2, 7, 2048])
+def test_batch_sizes_covers_stream_for_any_mean(mean_batch):
+    """mean_batch=1 used to raise (rng.integers(1, 1)); every mean must
+    produce positive sizes that sum to the stream length."""
+    from repro.launch.ingest import batch_sizes
+
+    sizes = batch_sizes(1000, mean_batch, seed=0)
+    assert sum(sizes) == 1000
+    assert all(s >= 1 for s in sizes)
+    if mean_batch == 1:
+        assert sizes == [1] * 1000

@@ -42,7 +42,7 @@ def test_fitted_prunes_nondividing():
 
 
 def test_fitted_prefix_of_multi_axis():
-    rules = Rules.make({"cache_seq": ("pod", "data", "model")})
+    Rules.make({"cache_seq": ("pod", "data", "model")})
     # 524288 divides by all 512
     spec = fitted_spec(
         (9, 1, 8, 524288, 128),

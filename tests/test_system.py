@@ -8,7 +8,6 @@ sharded train step, a checkpoint survives a restart.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import greedy, query as qry

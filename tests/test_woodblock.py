@@ -2,7 +2,7 @@
 
 import numpy as np
 
-from repro.core import predicates as preds, query as qry, rewards
+from repro.core import predicates as preds, rewards
 from repro.core.woodblock.agent import WoodblockConfig, build_woodblock
 from repro.core.woodblock.env import TreeEnv
 from repro.core.woodblock.featurize import Featurizer
@@ -30,7 +30,7 @@ def test_rewards_normalized():
 
     def random_policy(states, legals):
         acts = np.array(
-            [rng.choice(np.nonzero(l)[0]) for l in legals], np.int64
+            [rng.choice(np.nonzero(row)[0]) for row in legals], np.int64
         )
         return acts, np.zeros(len(acts)), np.zeros(len(acts))
 
