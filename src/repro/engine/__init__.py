@@ -3,6 +3,8 @@
 Public surface:
   LayoutEngine   — route / query_hits / route_queries / skip_stats / ingest
                    over a frozen tree
+  WindowStat / ObservationProbe — Eq. 1 per-batch skip-rate accounting
+                   (associative partials; drift monitoring)
   engine_for     — the per-tree attached engine (shared plan cache)
   register_backend / get_backend / available_backends — backend registry
   PlanCache / pad_bucket / trace_counts — compiled-plan cache + counters
@@ -22,6 +24,8 @@ from repro.engine.backends import (  # noqa: F401
 from repro.engine.engine import (  # noqa: F401
     IngestReport,
     LayoutEngine,
+    ObservationProbe,
+    WindowStat,
     engine_for,
 )
 from repro.engine.plan import (  # noqa: F401

@@ -34,6 +34,69 @@ from repro.engine import plan as planlib
 from repro.engine.plan import PlanCache
 
 
+@dataclasses.dataclass(frozen=True)
+class WindowStat:
+    """Associative Eq. 1 accounting partial over one or more batches.
+
+    ``scanned_tuples`` is the paper's Σ_q Σ_{P ∩ q} |P| restricted to the
+    observed records; ``capacity`` the matching denominator
+    Σ_batches (n_records · n_queries).  All fields are exact int64-range
+    Python ints, so :meth:`merge` (elementwise sum) is associative *and*
+    commutative bit-identically — shard partials fold in any order to the
+    same totals as the single-stream per-batch sequence.
+    """
+
+    scanned_tuples: int = 0
+    capacity: int = 0  # Σ n_records * n_queries over observed batches
+    n_records: int = 0
+
+    @property
+    def scanned_fraction(self) -> float:
+        """Eq. 1 fraction of tuples the standing workload would scan."""
+        return self.scanned_tuples / self.capacity if self.capacity else 0.0
+
+    def merge(self, other: "WindowStat") -> "WindowStat":
+        return WindowStat(
+            scanned_tuples=self.scanned_tuples + other.scanned_tuples,
+            capacity=self.capacity + other.capacity,
+            n_records=self.n_records + other.n_records,
+        )
+
+    # -- serialization (ShardState npz shipping) -----------------------------
+    def to_array(self) -> np.ndarray:
+        return np.asarray(
+            [self.scanned_tuples, self.capacity, self.n_records], np.int64
+        )
+
+    @staticmethod
+    def from_array(a: np.ndarray) -> "WindowStat":
+        return WindowStat(*(int(x) for x in a))
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservationProbe:
+    """Per-leaf hit accounting against one standing workload.
+
+    ``per_leaf[b]`` is the number of queries whose ``BID IN (...)`` list
+    contains block ``b`` — ``query_hits(workload).sum(axis=1)`` computed
+    once through the compiled plan.  Per-batch accounting is then a pure
+    numpy gather+sum (``observe``): O(m) per batch, no backend dispatch,
+    so ingest-time skip-rate monitoring never retraces a warm plan.
+    """
+
+    per_leaf: np.ndarray  # (n_leaves,) int64 queries scanning each block
+    n_queries: int
+
+    def observe(self, bids: np.ndarray) -> WindowStat:
+        """Eq. 1 partial for one routed batch."""
+        m = int(bids.shape[0])
+        return WindowStat(
+            scanned_tuples=int(self.per_leaf[bids].sum()),
+            capacity=m * self.n_queries,
+            n_records=m,
+        )
+
+
 @dataclasses.dataclass
 class IngestReport:
     """Summary of one streaming-ingestion run."""
@@ -45,6 +108,7 @@ class IngestReport:
     backend: str
     plan_cache: dict  # hits/misses/size snapshot
     traces: dict  # trace-counter deltas during the run
+    observation: Optional[WindowStat] = None  # set iff ``observe`` was given
 
     @property
     def records_per_s(self) -> float:
@@ -213,12 +277,33 @@ class LayoutEngine:
         )
 
     # -- streaming ingestion -------------------------------------------------
+    def observation_probe(
+        self,
+        workload: "qry.Workload | qry.WorkloadTensors | ObservationProbe",
+        backend: Optional[str] = None,
+    ) -> ObservationProbe:
+        """Per-leaf hit counts for ``workload`` against the current layout.
+
+        One ``query_hits`` through the compiled plan (warm: zero retraces),
+        reduced to ``(n_leaves,) int64``.  Already-built probes pass
+        through, so shard fan-outs can compute once and replicate.
+        """
+        if isinstance(workload, ObservationProbe):
+            return workload
+        hits = self.query_hits(workload, backend=backend)
+        return ObservationProbe(
+            per_leaf=hits.sum(axis=1).astype(np.int64),
+            n_queries=int(hits.shape[1]),
+        )
+
     def ingest(
         self,
         batches: Iterable[np.ndarray] | Iterator[np.ndarray],
         tighten: bool = True,
         buffers=None,  # data.blocks.BlockBuffers | None
         backend: Optional[str] = None,
+        observe=None,  # Workload | WorkloadTensors | ObservationProbe | None
+        on_observation=None,  # Callable[[WindowStat], None] | None
     ) -> IngestReport:
         """Route arriving micro-batches and fold them into the layout.
 
@@ -226,8 +311,24 @@ class LayoutEngine:
         min-max-tighten leaf descriptions.  The incremental tightener is
         exactly equivalent to one-shot ``FrozenQdTree.tighten`` over the
         concatenation of all batches (min/max/any are associative).
+
+        With ``observe`` set (a standing workload or a pre-built
+        :class:`ObservationProbe`), every routed batch is additionally
+        scored against the workload's per-leaf hit counts — the paper's
+        Eq. 1 restricted to that batch — and the resulting
+        :class:`WindowStat` is passed to ``on_observation`` (the seam a
+        drift monitor plugs into; see ``repro.service.drift``).  The run's
+        aggregate lands in ``IngestReport.observation``.  The probe is
+        built once per call from the layout as of the start of the run, so
+        the accounting itself is a pure numpy gather — no retraces.
         """
         traces0 = planlib.trace_counts()
+        probe = (
+            self.observation_probe(observe, backend=backend)
+            if observe is not None
+            else None
+        )
+        observed = WindowStat() if probe is not None else None
         tightener = IncrementalTightener(self.tree) if tighten else None
         # the tightener already keeps per-leaf counts; only maintain a
         # separate accumulator when there is no tightener to read back
@@ -244,6 +345,11 @@ class LayoutEngine:
                 tightener.update(batch, bids)
             else:
                 sizes += np.bincount(bids, minlength=sizes.shape[0])
+            if probe is not None:
+                stat = probe.observe(bids)
+                observed = observed.merge(stat)
+                if on_observation is not None:
+                    on_observation(stat)
             n_batches += 1
             n_records += batch.shape[0]
         if tightener is not None:
@@ -259,6 +365,7 @@ class LayoutEngine:
             backend=backend or self.backend,
             plan_cache=self.plans.stats(),
             traces=delta,
+            observation=observed,
         )
 
     # -- introspection -------------------------------------------------------

@@ -29,6 +29,7 @@ regardless of association or order).  Three pieces:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from concurrent.futures import Executor, ProcessPoolExecutor, ThreadPoolExecutor
@@ -38,7 +39,13 @@ import numpy as np
 
 from repro.core.qdtree import FrozenQdTree, IncrementalTightener
 from repro.engine import plan as planlib
-from repro.engine.engine import IngestReport, LayoutEngine, engine_for
+from repro.engine.engine import (
+    IngestReport,
+    LayoutEngine,
+    ObservationProbe,
+    WindowStat,
+    engine_for,
+)
 
 
 @dataclasses.dataclass
@@ -54,6 +61,12 @@ class ShardState:
     (empty when the ingestor ran with ``collect_blocks=False``).  Chunk
     lists concatenate under merge and are sorted by shard id at publish
     time, so block contents are independent of merge order too.
+
+    ``obs`` carries the shard's Eq. 1 skip-rate accounting partial (a
+    :class:`~repro.engine.engine.WindowStat`, all-zero when the ingestor
+    ran without an observation probe).  Its merge is an exact int sum, so
+    the folded window stats are bit-identical to the single-stream
+    per-batch sequence for every shard count.
     """
 
     shard_ids: tuple[int, ...]
@@ -67,6 +80,7 @@ class ShardState:
     n_records: int
     chunks: dict[int, list[tuple[int, np.ndarray]]]
     wall_s: float = 0.0
+    obs: WindowStat = dataclasses.field(default_factory=WindowStat)
 
     def merge(self, other: "ShardState") -> "ShardState":
         """Associative, commutative fold of two shard states.
@@ -97,6 +111,7 @@ class ShardState:
             n_records=self.n_records + other.n_records,
             chunks=chunks,
             wall_s=max(self.wall_s, other.wall_s),
+            obs=self.obs.merge(other.obs),
         )
 
     # -- serialization (cross-host shipping) --------------------------------
@@ -112,6 +127,7 @@ class ShardState:
                 [self.n_leaves, self.n_batches, self.n_records], np.int64
             ),
             "wall_s": np.asarray(self.wall_s),
+            "obs": self.obs.to_array(),
         }
         for b, clist in self.chunks.items():
             for sid, rows in clist:
@@ -141,6 +157,11 @@ class ShardState:
             n_records=int(meta[2]),
             chunks=chunks,
             wall_s=float(z["wall_s"]),
+            obs=(
+                WindowStat.from_array(z["obs"])
+                if "obs" in z.files
+                else WindowStat()
+            ),
         )
 
 
@@ -159,6 +180,7 @@ class ShardIngestor:
         shard_id: int = 0,
         backend: Optional[str] = None,
         collect_blocks: bool = False,
+        probe: Optional[ObservationProbe] = None,
     ):
         self.engine = (
             layout
@@ -168,6 +190,10 @@ class ShardIngestor:
         self.shard_id = int(shard_id)
         self.backend = backend
         self.collect_blocks = collect_blocks
+        # replicated per-leaf hit counts (engine.observation_probe): every
+        # shard scores against the SAME probe arrays, so the summed
+        # window-stat partials are bit-identical to single-stream ingest
+        self.probe = probe
 
     def run(self, batches: Iterable[np.ndarray]) -> ShardState:
         """Route every micro-batch; return this shard's aggregates."""
@@ -181,6 +207,7 @@ class ShardIngestor:
             BlockBuffers.for_tree(tree) if self.collect_blocks else None
         )
         n_batches = n_records = 0
+        obs = WindowStat()
         t0 = time.perf_counter()
         for batch in batches:
             if batch.shape[0] == 0:
@@ -189,6 +216,8 @@ class ShardIngestor:
             tightener.update(batch, bids)
             if spill is not None:
                 spill.append(batch, bids)
+            if self.probe is not None:
+                obs = obs.merge(self.probe.observe(bids))
             n_batches += 1
             n_records += batch.shape[0]
         chunks = (
@@ -211,6 +240,7 @@ class ShardIngestor:
             n_records=n_records,
             chunks=chunks,
             wall_s=time.perf_counter() - t0,
+            obs=obs,
         )
 
 
@@ -266,11 +296,24 @@ class MergeCoordinator:
 
 @dataclasses.dataclass
 class ShardedIngestReport(IngestReport):
-    """IngestReport plus shard-parallel accounting."""
+    """IngestReport plus shard-parallel accounting.
 
-    n_shards: int
-    shard_wall_s: tuple[float, ...]  # per-shard routing wall clock
-    merge_s: float  # associative fold + publish
+    (Defaults exist only because the base class now carries a defaulted
+    ``observation`` field; :func:`sharded_ingest` always sets these.)
+
+    ``published`` is True iff the merged tightening was applied to the
+    tree; ``stale_generation`` is True when a requested publish was
+    *skipped* because the caller's ``publish_check`` reported that the
+    tree is no longer the live generation (hot-swapped out mid-run) — the
+    aggregates in this report are still valid for the captured tree, but
+    nothing was mutated.
+    """
+
+    n_shards: int = 0
+    shard_wall_s: tuple[float, ...] = ()  # per-shard routing wall clock
+    merge_s: float = 0.0  # associative fold + publish
+    published: bool = False
+    stale_generation: bool = False
 
     @property
     def shard_records_per_s(self) -> float:
@@ -324,6 +367,8 @@ def sharded_ingest(
     tighten: bool = True,
     backend: Optional[str] = None,
     lock=None,  # context manager guarding the publish step
+    observe=None,  # Workload | WorkloadTensors | ObservationProbe | None
+    publish_check=None,  # Callable[[], bool], evaluated under ``lock``
 ) -> ShardedIngestReport:
     """Shard ``records`` across parallel ingestors and merge associatively.
 
@@ -335,6 +380,17 @@ def sharded_ingest(
     records for every k.  With ``tighten=False`` the tree is left
     untouched (same contract as ``ingest``): buffers still fill and the
     merged counts/partials are still computed and reported.
+
+    With ``observe`` set, one :class:`ObservationProbe` is built from the
+    engine's compiled plan and replicated to every shard; the merged
+    Eq. 1 window-stat partial lands in ``report.observation`` —
+    bit-identical to the single-stream ``ingest(observe=...)`` totals.
+
+    ``publish_check`` guards against publishing into a tree that was
+    hot-swapped out mid-run: it is evaluated under ``lock`` immediately
+    before the tightening is applied, and if it returns False the publish
+    is skipped and the report carries ``stale_generation=True`` (see
+    ``LayoutService.ingest_sharded``).
 
     ``executor`` must be thread-based: ingestors close over the live
     engine (compiled plans don't pickle).  For process pools or real
@@ -356,10 +412,15 @@ def sharded_ingest(
     if buffers is not None:
         collect_blocks = True
     traces0 = planlib.trace_counts()
+    probe = (
+        engine.observation_probe(observe, backend=backend)
+        if observe is not None
+        else None
+    )
     ingestors = [
         ShardIngestor(
             engine, shard_id=i, backend=backend,
-            collect_blocks=collect_blocks,
+            collect_blocks=collect_blocks, probe=probe,
         )
         for i in range(n_shards)
     ]
@@ -381,13 +442,18 @@ def sharded_ingest(
     coordinator = MergeCoordinator(engine.tree)
     for state in states:
         coordinator.add(state)
+    published = stale = False
     if tighten:
-        if lock is not None:
-            with lock:
+        # publish under the caller's lock; re-check liveness there — the
+        # tree may have been hot-swapped out while the shards were routing,
+        # and tightening a non-live tree would go unannounced otherwise
+        with (lock if lock is not None else contextlib.nullcontext()):
+            if publish_check is None or publish_check():
                 sizes = coordinator.publish(buffers=buffers)
-        else:
-            sizes = coordinator.publish(buffers=buffers)
-    else:
+                published = True
+            else:
+                stale = True
+    if not published:
         if buffers is not None:
             coordinator.fill_buffers(buffers)
         sizes = coordinator.merged.counts.copy()
@@ -402,9 +468,12 @@ def sharded_ingest(
         backend=backend or engine.backend,
         plan_cache=engine.plans.stats(),
         traces=delta,
+        observation=merged.obs if probe is not None else None,
         n_shards=n_shards,
         shard_wall_s=tuple(s.wall_s for s in states),
         merge_s=t1 - t_merge,
+        published=published,
+        stale_generation=stale,
     )
 
 

@@ -17,6 +17,7 @@ Prints per-phase throughput plus the engine's plan-cache/trace counters and
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import numpy as np
@@ -24,7 +25,7 @@ import numpy as np
 from repro.data import datagen, workload as wl
 from repro.data.blocks import BlockBuffers
 from repro.engine import pad_bucket, trace_counts
-from repro.service import LayoutService
+from repro.service import DriftConfig, LayoutService
 
 
 def make_workload(name: str, rows: int, seed: int):
@@ -82,6 +83,25 @@ def main() -> None:
     ap.add_argument("--rebuild", action="store_true",
                     help="after ingest, rebuild on the full corpus and "
                          "hot-swap if the Eq.1 skip rate improves")
+    ap.add_argument("--drift", action="store_true",
+                    help="monitor the stream's Eq.1 skip rate against the "
+                         "workload and auto-rebuild (hot-swap via CAS) "
+                         "when it degrades past the --drift-* policy")
+    ap.add_argument("--drift-window", type=int, default=16,
+                    help="sliding window length, in observations")
+    ap.add_argument("--drift-abs", type=float, default=None,
+                    help="absolute scanned-fraction trigger threshold "
+                         "(unset: relative rule only)")
+    ap.add_argument("--drift-rel", type=float, default=0.5,
+                    help="trigger when the window rate degrades past "
+                         "best_seen*(1+REL); <=0 disables the rule")
+    ap.add_argument("--drift-hysteresis", type=int, default=2,
+                    help="consecutive breaching observations required")
+    ap.add_argument("--drift-cooldown", type=int, default=16,
+                    help="observations blocked after a trigger")
+    ap.add_argument("--drift-reservoir", type=int, default=65536,
+                    help="recent-record reservoir capacity rebuilds "
+                         "train on")
     ap.add_argument("--store", default=None,
                     help="optional path to persist the ingested BlockStore")
     ap.add_argument("--seed", type=int, default=0)
@@ -106,6 +126,32 @@ def main() -> None:
         f"({frozen.n_leaves} blocks, depth {frozen.depth})"
     )
 
+    monitor = None
+    if args.drift:
+        rel = args.drift_rel if args.drift_rel > 0 else None
+        monitor = service.auto_rebuilder(
+            work,
+            config=DriftConfig(
+                window=args.drift_window,
+                min_fill=max(args.drift_window // 4, 1),
+                abs_threshold=args.drift_abs,
+                rel_degradation=rel,
+                hysteresis=args.drift_hysteresis,
+                cooldown=args.drift_cooldown,
+            ),
+            reservoir_capacity=args.drift_reservoir,
+            rebuild_kw=dict(
+                cuts=cuts, min_block=args.min_block, seed=args.seed
+            ),
+        )
+        print(
+            f"[ingest] drift monitor on: window={args.drift_window} "
+            f"abs={args.drift_abs} rel={rel} "
+            f"hysteresis={args.drift_hysteresis} "
+            f"cooldown={args.drift_cooldown} "
+            f"reservoir={args.drift_reservoir}"
+        )
+
     engine = service.engine
     buffers = BlockBuffers.for_tree(frozen)
     # warmup: compile the routing plan for every padding bucket the jittered
@@ -120,18 +166,68 @@ def main() -> None:
     buckets = {pad_bucket(s, 64) for s in sizes}
     for m in sorted(min(b, records.shape[0]) for b in buckets):
         engine.route(records[:m])
+    if monitor is not None:
+        # drift accounting probes the workload's query plan once per
+        # ingest run — compile it now so the stream itself stays warm
+        engine.query_hits(work)
     if args.shards > 1:
-        report = service.ingest_sharded(
-            records, args.shards, batch=args.batch, buffers=buffers
-        )
-        slowest = max(report.shard_wall_s)
+        if monitor is None:
+            shard_rounds = [service.ingest_sharded(
+                records, args.shards, batch=args.batch, buffers=buffers,
+            )]
+            report = shard_rounds[0]
+        else:
+            # one sharded run yields ONE drift observation — stream in
+            # rounds so the monitor sees a sequence it can trigger on
+            # (min_fill/hysteresis need consecutive observations)
+            n_rounds = max(args.drift_window, 4)
+            chunk = max(-(-records.shape[0] // n_rounds), args.shards)
+            shard_rounds = []
+            for s in range(0, records.shape[0], chunk):
+                if service.tree is not frozen:
+                    # a drift rebuild deployed: later rounds route on the
+                    # new live tree — restart buffers for its geometry
+                    frozen = service.tree
+                    buffers = BlockBuffers.for_tree(frozen)
+                    print(
+                        "[ingest] drift rebuild deployed; block buffers "
+                        "restarted for the new generation"
+                    )
+                shard_rounds.append(service.ingest_sharded(
+                    records[s : s + chunk], args.shards, batch=args.batch,
+                    buffers=buffers, monitor=monitor,
+                ))
+            traces_total: dict = {}
+            for r in shard_rounds:
+                for name, n in r.traces.items():
+                    traces_total[name] = traces_total.get(name, 0) + n
+            obs = shard_rounds[0].observation
+            for r in shard_rounds[1:]:
+                obs = obs.merge(r.observation) if obs is not None else None
+            report = dataclasses.replace(
+                shard_rounds[-1],
+                n_records=sum(r.n_records for r in shard_rounds),
+                n_batches=sum(r.n_batches for r in shard_rounds),
+                wall_s=sum(r.wall_s for r in shard_rounds),
+                traces=traces_total,
+                observation=obs,
+            )
+        last = shard_rounds[-1]
         print(
-            f"[ingest] {args.shards} shards routed in {slowest:.2f}s "
-            f"(slowest shard) -> {report.shard_records_per_s:,.0f} rec/s "
-            f"pooled; merge+publish {report.merge_s*1e3:.1f}ms"
+            f"[ingest] {args.shards} shards routed in "
+            f"{max(last.shard_wall_s):.2f}s (slowest shard, last round) "
+            f"-> {last.shard_records_per_s:,.0f} rec/s pooled; "
+            f"merge+publish {last.merge_s*1e3:.1f}ms"
         )
+        if any(r.stale_generation for r in shard_rounds):
+            print(
+                "[ingest] publish skipped for a round: the tree was "
+                "hot-swapped out mid-run (stale generation)"
+            )
     else:
-        report = engine.ingest(micro_batches(records, sizes), buffers=buffers)
+        report = service.ingest(
+            micro_batches(records, sizes), buffers=buffers, monitor=monitor
+        )
     print(
         f"[ingest] {report.n_records} records / {report.n_batches} "
         f"micro-batches in {report.wall_s:.2f}s -> "
@@ -141,7 +237,41 @@ def main() -> None:
     print(f"[ingest] traces during ingest (0 ⇒ fully warm): {report.traces}")
     print(f"[ingest] all traces: {trace_counts()}")
 
-    stats = engine.skip_stats(records, work, tighten=False)
+    drift_summary = None
+    if monitor is not None:
+        monitor.drain()
+        monitor.close()
+        if report.observation is not None:
+            print(
+                f"[ingest] drift: stream scanned fraction "
+                f"{report.observation.scanned_fraction:.4f} over "
+                f"{report.observation.n_records} observed records"
+            )
+        for ev in monitor.events:
+            what = (
+                f"skipped ({ev.skipped})" if ev.skipped
+                else f"error ({ev.error})" if ev.error
+                else "deployed gen "
+                     f"{ev.report.new_generation}" if ev.deployed
+                else "kept live tree (candidate not better)"
+            )
+            print(
+                f"[ingest] drift trigger at obs {ev.observation} "
+                f"({ev.decision.reason}, window "
+                f"{ev.decision.window_rate:.4f}): {what}"
+            )
+        drift_summary = {
+            "observed_scanned_fraction": (
+                report.observation.scanned_fraction
+                if report.observation is not None else None
+            ),
+            "triggers": len(monitor.events),
+            "rebuilds_deployed": monitor.rebuilds_deployed,
+            "generation": service.generation,
+        }
+
+    # score the CURRENT live tree — a drift rebuild may have swapped it
+    stats = service.engine.skip_stats(records, work, tighten=False)
     print(
         f"[ingest] layout quality: scanned fraction "
         f"{stats.scanned_fraction:.4f} over {stats.n_queries} queries"
@@ -184,6 +314,7 @@ def main() -> None:
         "ingest_traces": report.traces,
         "scanned_fraction": stats.scanned_fraction,
         "rebuild": rebuild_summary,
+        "drift": drift_summary,
     }
     print(json.dumps(summary))
 

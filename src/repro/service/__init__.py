@@ -6,6 +6,8 @@ Public surface:
   LayoutService                          — versioned serving facade with
                                            rebuild-in-place hot swap
   LayoutVersion / RebuildReport          — lifecycle artifacts
+  DriftMonitor / DriftConfig / AutoRebuilder / RecordReservoir —
+                                           drift-triggered auto-rebuild
 """
 
 from repro.service.builders import (  # noqa: F401
@@ -15,6 +17,14 @@ from repro.service.builders import (  # noqa: F401
     build_layout,
     get_builder,
     register_builder,
+)
+from repro.service.drift import (  # noqa: F401
+    AutoRebuilder,
+    DriftConfig,
+    DriftDecision,
+    DriftMonitor,
+    RebuildEvent,
+    RecordReservoir,
 )
 from repro.service.service import (  # noqa: F401
     LayoutService,

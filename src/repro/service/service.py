@@ -174,8 +174,33 @@ class LayoutService:
     def skip_stats(self, records, workload, **kw):
         return self._live.engine.skip_stats(records, workload, **kw)
 
-    def ingest(self, batches: Iterable[np.ndarray], **kw):
-        return self._live.engine.ingest(batches, **kw)
+    def ingest(self, batches: Iterable[np.ndarray], monitor=None, **kw):
+        """Streaming ingestion into the live tree (``LayoutEngine.ingest``).
+
+        With ``monitor`` (an :class:`~repro.service.drift.AutoRebuilder`),
+        every batch is teed into the monitor's record reservoir and scored
+        against its standing workload (Eq. 1 per-batch accounting through
+        the compiled plan); the monitor may fire a background rebuild
+        mid-stream.  The run itself keeps routing/tightening the engine
+        captured at call time — a concurrent hot swap takes effect for the
+        *next* ingest call, exactly like any other in-flight operation.
+        Once a swap lands, the remainder of this call's observations
+        (which still measure the superseded tree) are dropped rather than
+        fed to the freshly rebaselined monitor, so one long stream cannot
+        re-trigger redundant rebuilds against a tree that no longer
+        serves; batches keep filling the reservoir throughout.
+        """
+        live = self._live
+        if monitor is not None:
+            kw.setdefault("observe", monitor.workload)
+
+            def _observe_if_live(stat):
+                if self._live is live:
+                    monitor.observe(stat)
+
+            kw.setdefault("on_observation", _observe_if_live)
+            batches = monitor.tee(batches)
+        return live.engine.ingest(batches, **kw)
 
     def ingest_sharded(
         self,
@@ -183,6 +208,7 @@ class LayoutService:
         n_shards: int,
         batch: int = 2048,
         executor: Optional[Executor] = None,
+        monitor=None,
         **kw,
     ):
         """Shard-parallel ingestion into the live tree (engine.sharded).
@@ -196,14 +222,44 @@ class LayoutService:
         evicts stale per-signature query plans exactly as a single-stream
         ``ingest`` would, so readers hot-cut to the tightened descriptions
         atomically.  Bit-identical to ``ingest`` over the same records.
+
+        If another thread hot-swaps the live tree while the shards are
+        routing, the merged tightening is NOT silently published into the
+        outgoing generation: liveness is re-checked under the lock at
+        publish time, and a stale run returns its (still-valid) aggregates
+        with ``published=False, stale_generation=True``.
+
+        ``monitor`` (an :class:`~repro.service.drift.AutoRebuilder`) adds
+        the records to the monitor's reservoir and feeds it the run's
+        merged Eq. 1 window-stat partial — bit-identical to the
+        single-stream per-batch totals — as one observation.
         """
         from repro.engine.sharded import sharded_ingest
 
         live = self._live  # consistent engine/tree view for the whole run
-        return sharded_ingest(
+        if monitor is not None:
+            kw.setdefault("observe", monitor.workload)
+        report = sharded_ingest(
             live.engine, records, n_shards, batch=batch,
-            executor=executor, lock=self._lock, **kw,
+            executor=executor, lock=self._lock,
+            publish_check=lambda: self._live is live, **kw,
         )
+        if monitor is not None:
+            monitor.add_records(records)
+            if report.observation is not None:
+                monitor.observe(report.observation)
+        return report
+
+    def auto_rebuilder(self, workload, config=None, **kw):
+        """An :class:`~repro.service.drift.AutoRebuilder` bound to this
+        service: pass it as ``monitor=`` to ``ingest``/``ingest_sharded``
+        and the service becomes self-optimizing — skip-rate drift past the
+        configured policy triggers a background ``rebuild`` whose
+        deployment rides the same compare-and-swap as manual rebuilds.
+        """
+        from repro.service.drift import AutoRebuilder
+
+        return AutoRebuilder(self, workload, config=config, **kw)
 
     # -- lifecycle: swap / rollback / release --------------------------------
     def swap(self, build: LayoutBuild) -> int:
@@ -236,7 +292,13 @@ class LayoutService:
                 if not older:
                     raise ValueError("no older generation to roll back to")
                 generation = max(older)
-            self._live = self._versions[generation]
+            v = self._versions.get(generation)
+            if v is None:
+                raise ValueError(
+                    f"unknown or released generation {generation}; "
+                    f"retained: {tuple(sorted(self._versions))}"
+                )
+            self._live = v
             return generation
 
     def release(self, generation: int) -> int:
@@ -244,12 +306,31 @@ class LayoutService:
 
         Returns the number of plan-cache entries evicted.  The live
         generation cannot be released.
+
+        Plan signatures are refcounted across retained versions: when the
+        released generation's tree also backs another retained generation
+        (re-deploying the same build — e.g. force-swapping an ``if_better``
+        candidate, then rolling forward again — yields distinct
+        generations over one tree object), its compiled plans stay cached
+        until the LAST holder is released.  Evicting on first release
+        would silently cold-start a generation that is still serving.
         """
         with self._lock:
             if generation == self._live.generation:
                 raise ValueError("cannot release the live generation")
-            v = self._versions.pop(generation)
+            v = self._versions.get(generation)
+            if v is None:
+                raise ValueError(
+                    f"unknown or released generation {generation}; "
+                    f"retained: {tuple(sorted(self._versions))}"
+                )
+            del self._versions[generation]
             sig = planlib.tree_signature(v.tree)
+            if any(
+                planlib.tree_signature(u.tree) == sig
+                for u in self._versions.values()
+            ):
+                return 0  # another retained generation still holds these
             return self.plans.evict(
                 lambda k: isinstance(k, PlanKey) and k.sig == sig
             )

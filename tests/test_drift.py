@@ -1,0 +1,401 @@
+"""Drift-triggered auto-rebuild tests: WindowStat merge algebra,
+per-batch ingest observation accounting, DriftMonitor trigger policy
+(absolute/relative thresholds, hysteresis, cooldown, rebaseline),
+RecordReservoir recency semantics, and the AutoRebuilder loop (trigger →
+background rebuild → CAS deploy, single in-flight rebuild)."""
+
+import threading
+import types
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers without hypothesis
+    from tests._hypothesis_shim import given, settings, st
+
+from repro.core import query as qry
+from repro.core.predicates import OP_GE, OP_LT, Column, Schema
+from repro.core.query import Query, RangeAtom
+from repro.engine import LayoutEngine, WindowStat
+from repro.service import (
+    AutoRebuilder,
+    DriftConfig,
+    DriftMonitor,
+    LayoutService,
+    RecordReservoir,
+    build_layout,
+)
+
+
+def _stat(scanned: int, capacity: int) -> WindowStat:
+    return WindowStat(
+        scanned_tuples=scanned, capacity=capacity, n_records=capacity
+    )
+
+
+def _drift_setup(seed=0, rows=6000):
+    """Two orthogonal range workloads over a 2-column schema: a tree
+    built for queries on column 0 cannot skip for queries on column 1."""
+    rng = np.random.default_rng(seed)
+    schema = Schema((
+        Column("a", "numeric", 1000), Column("b", "numeric", 1000),
+    ))
+    records = rng.integers(0, 1000, (rows, 2)).astype(np.int32)
+
+    def workload(dim, wseed, n=8, width=60):
+        wrng = np.random.default_rng(wseed)
+        qs = tuple(
+            Query.conjunction([
+                RangeAtom(dim, OP_GE, lo), RangeAtom(dim, OP_LT, lo + width),
+            ])
+            for lo in (
+                int(wrng.integers(0, 1000 - width)) for _ in range(n)
+            )
+        )
+        return qry.Workload(schema, qs)
+
+    return records, workload(0, seed + 1), workload(1, seed + 2)
+
+
+# ---------------------------------------------------------------------------
+# WindowStat algebra
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_window_stat_merge_associative_commutative(data):
+    stats = [
+        _stat(
+            data.draw(st.integers(min_value=0, max_value=10**9), label="s"),
+            data.draw(st.integers(min_value=0, max_value=10**9), label="c"),
+        )
+        for _ in range(3)
+    ]
+    a, b, c = stats
+    assert a.merge(b).merge(c) == a.merge(b.merge(c))
+    assert a.merge(b) == b.merge(a)
+    assert a.merge(WindowStat()) == a  # identity element
+    rt = WindowStat.from_array(a.merge(c).to_array())
+    assert rt == a.merge(c)
+
+
+def test_window_stat_fraction():
+    assert _stat(25, 100).scanned_fraction == 0.25
+    assert WindowStat().scanned_fraction == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Engine-side observation accounting
+# ---------------------------------------------------------------------------
+def test_ingest_observation_matches_oracle_accounting():
+    records, work_a, _ = _drift_setup(3)
+    build = build_layout(records, work_a, min_block=150)
+    eng = LayoutEngine(build.tree, backend="numpy")
+
+    # oracle: per-leaf query-hit counts against the pre-ingest layout
+    # (routing depends only on the frozen topology, so bids are stable)
+    per_leaf = eng.query_hits(work_a).sum(axis=1).astype(np.int64)
+    bids = eng.route(records)
+    want_scanned = int(per_leaf[bids].sum())
+
+    seen = []
+    rep = eng.ingest(
+        (records[s : s + 97] for s in range(0, records.shape[0], 97)),
+        observe=work_a,
+        on_observation=seen.append,
+    )
+    assert rep.observation.scanned_tuples == want_scanned
+    assert rep.observation.n_records == records.shape[0]
+    assert rep.observation.capacity == records.shape[0] * len(work_a)
+    assert len(seen) == rep.n_batches
+    folded = WindowStat()
+    for s in seen:
+        folded = folded.merge(s)
+    assert folded == rep.observation
+    # plain ingest (no observe) reports no observation
+    assert (
+        LayoutEngine(build_layout(records, work_a, min_block=150).tree,
+                     backend="numpy")
+        .ingest([records[:100]]).observation
+        is None
+    )
+
+
+# ---------------------------------------------------------------------------
+# DriftMonitor policy
+# ---------------------------------------------------------------------------
+def test_monitor_absolute_threshold_with_hysteresis():
+    mon = DriftMonitor(DriftConfig(
+        window=4, min_fill=1, abs_threshold=0.5, rel_degradation=None,
+        hysteresis=2, cooldown=3,
+    ))
+    assert not mon.observe(_stat(10, 100)).triggered  # healthy
+    d1 = mon.observe(_stat(95, 100))  # first breach: hysteresis holds it
+    assert not d1.triggered and d1.breaches == 1 and d1.reason == "abs"
+    d2 = mon.observe(_stat(95, 100))  # second consecutive breach: fire
+    assert d2.triggered and d2.reason == "abs"
+    # cooldown: the next 3 observations cannot trigger however bad
+    for _ in range(3):
+        d = mon.observe(_stat(100, 100))
+        assert not d.triggered and d.reason == "cooldown"
+    # after cooldown, hysteresis counts afresh
+    assert not mon.observe(_stat(100, 100)).triggered
+    assert mon.observe(_stat(100, 100)).triggered
+
+
+def test_monitor_relative_degradation_and_rebaseline():
+    mon = DriftMonitor(DriftConfig(
+        window=2, min_fill=1, abs_threshold=None, rel_degradation=1.0,
+        hysteresis=1, cooldown=0,
+    ))
+    mon.observe(_stat(10, 100))
+    assert mon.best_rate == pytest.approx(0.10)
+    # 0.15 < best * 2.0 — within tolerated degradation
+    assert not mon.observe(_stat(20, 100)).triggered
+    # window (0.2, 0.9 → 0.55) > 0.1 * 2 — degradation vs best-seen
+    d = mon.observe(_stat(90, 100))
+    assert d.triggered and d.reason == "rel"
+    # rebaseline forgets the old best and refuses to fire while refilling
+    mon.rebaseline()
+    assert np.isnan(mon.best_rate) and mon.window_stat == WindowStat()
+    d = mon.observe(_stat(90, 100))
+    assert not d.triggered  # new baseline: 0.9 is the best we know
+    assert mon.best_rate == pytest.approx(0.90)
+
+
+def test_monitor_warmup_and_config_validation():
+    mon = DriftMonitor(DriftConfig(
+        window=8, min_fill=4, abs_threshold=0.1, rel_degradation=None,
+        hysteresis=1, cooldown=0,
+    ))
+    for _ in range(3):
+        d = mon.observe(_stat(100, 100))
+        assert not d.triggered and d.reason == "warmup"
+    assert mon.observe(_stat(100, 100)).triggered  # min_fill reached
+    for bad in (
+        dict(window=0),
+        dict(min_fill=0),
+        dict(min_fill=20, window=10),
+        dict(hysteresis=0),
+        dict(cooldown=-1),
+        dict(abs_threshold=None, rel_degradation=None),
+    ):
+        with pytest.raises(ValueError):
+            DriftConfig(**bad)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_monitor_hysteresis_cooldown_invariants(data):
+    """Policy invariants hold for arbitrary observation sequences: windowed
+    rate is the exact fold of the last ``window`` stats, triggers imply
+    ``hysteresis`` consecutive breaches, and no trigger lands within
+    ``cooldown`` observations of the previous one."""
+    cfg = DriftConfig(
+        window=data.draw(st.integers(min_value=1, max_value=6), label="w"),
+        min_fill=1,
+        abs_threshold=0.5,
+        rel_degradation=None,
+        hysteresis=data.draw(st.integers(min_value=1, max_value=3),
+                             label="h"),
+        cooldown=data.draw(st.integers(min_value=0, max_value=4), label="c"),
+    )
+    mon = DriftMonitor(cfg)
+    stats, decisions = [], []
+    for _ in range(30):
+        s = _stat(data.draw(
+            st.integers(min_value=0, max_value=100), label="rate"
+        ), 100)
+        stats.append(s)
+        decisions.append(mon.observe(s))
+
+    last_trigger = None
+    breach_run = 0
+    for i, (s, d) in enumerate(zip(stats, decisions)):
+        window = stats[max(0, i + 1 - cfg.window) : i + 1]
+        folded = WindowStat()
+        for w in window:
+            folded = folded.merge(w)
+        assert d.window_rate == folded.scanned_fraction  # exact fold
+        in_cooldown = (
+            last_trigger is not None and i - last_trigger <= cfg.cooldown
+        )
+        breached = (not in_cooldown) and folded.scanned_fraction > 0.5
+        breach_run = breach_run + 1 if breached else 0
+        if d.triggered:
+            assert breach_run >= cfg.hysteresis  # hysteresis honored
+            assert not in_cooldown  # cooldown honored
+            last_trigger = i
+            breach_run = 0
+
+
+def test_monitor_is_deterministic():
+    seq = [(_stat(s, 100)) for s in (5, 10, 80, 90, 95, 20, 99, 99, 99)]
+    cfg = DriftConfig(window=3, min_fill=2, abs_threshold=0.6,
+                      rel_degradation=2.0, hysteresis=2, cooldown=2)
+    runs = []
+    for _ in range(2):
+        mon = DriftMonitor(cfg)
+        # repr-compare: best_rate is NaN during warmup, and NaN != NaN
+        runs.append([repr(mon.observe(s)) for s in seq])
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# RecordReservoir
+# ---------------------------------------------------------------------------
+def test_reservoir_keeps_most_recent_rows_in_order():
+    res = RecordReservoir(capacity=10)
+    rows = np.arange(37, dtype=np.int32).reshape(-1, 1)
+    for s in range(0, 37, 4):  # batches of 4 with a tail of 1
+        res.add(rows[s : s + 4])
+    assert len(res) == 10 and res.records_seen == 37
+    np.testing.assert_array_equal(res.snapshot()[:, 0], np.arange(27, 37))
+    # one oversized batch: only its tail survives, still in order
+    res.add(np.arange(100, 125, dtype=np.int32).reshape(-1, 1))
+    np.testing.assert_array_equal(res.snapshot()[:, 0], np.arange(115, 125))
+    res.clear()
+    assert len(res) == 0 and res.snapshot().shape[0] == 0
+    with pytest.raises(ValueError):
+        RecordReservoir(0)
+
+
+# ---------------------------------------------------------------------------
+# AutoRebuilder loop
+# ---------------------------------------------------------------------------
+def test_auto_rebuilder_recovers_from_workload_shift():
+    records, work_a, work_b = _drift_setup(7)
+    svc = LayoutService.build(
+        records[:2000], work_a, strategy="greedy", backend="numpy",
+        min_block=100,
+    )
+    gen0 = svc.generation
+    with svc.auto_rebuilder(
+        work_a,
+        config=DriftConfig(window=4, min_fill=2, abs_threshold=0.5,
+                           rel_degradation=None, hysteresis=2, cooldown=4),
+        reservoir_capacity=4000,
+        executor="sync",
+        rebuild_kw=dict(min_block=100),
+    ) as rebuilder:
+        def batches(rs):
+            for s in range(0, rs.shape[0], 500):
+                yield rs[s : s + 500]
+
+        rep_a = svc.ingest(batches(records[:3000]), monitor=rebuilder)
+        assert rep_a.observation.scanned_fraction < 0.5
+        assert svc.generation == gen0 and not rebuilder.events
+
+        rebuilder.set_workload(work_b)  # the query distribution drifts
+        svc.ingest(batches(records[3000:]), monitor=rebuilder)
+        assert rebuilder.rebuilds_deployed == 1
+        (event,) = [e for e in rebuilder.events if e.deployed]
+        assert event.report.swapped and event.decision.triggered
+        assert svc.generation > gen0
+        # the reservoir held recent records — the deployed tree skips the
+        # NEW workload near-oracle-level
+        recovered = svc.skip_stats(
+            records, work_b, tighten=False
+        ).scanned_fraction
+        oracle = build_layout(
+            records, work_b, min_block=100
+        ).scanned_fraction
+        assert recovered <= max(1.2 * oracle, oracle + 0.02)
+        # the trigger came from the drift window, not the end of stream:
+        # phase A was 6 healthy observations, hysteresis needs 2 breaches
+        assert event.decision.observations <= 9
+        # monitor was rebaselined after the deploy: the window only holds
+        # post-swap observations
+        assert rebuilder.monitor.window_stat.n_records <= 2500
+
+
+def test_auto_rebuilder_single_inflight_and_skip_events():
+    """Concurrent triggers while one rebuild runs must not stack rebuilds:
+    exactly one fires, the rest are recorded as skipped."""
+    gate = threading.Event()
+    calls = []
+
+    def slow_rebuild(records, workload, **kw):
+        calls.append(threading.get_ident())
+        assert gate.wait(10)
+        return types.SimpleNamespace(swapped=True)
+
+    svc = types.SimpleNamespace(rebuild=slow_rebuild)
+    rebuilder = AutoRebuilder(
+        svc, workload=None,
+        config=DriftConfig(window=1, min_fill=1, abs_threshold=0.1,
+                           rel_degradation=None, hysteresis=1, cooldown=0),
+        reservoir_capacity=8,
+    )
+    rebuilder.add_records(np.ones((4, 2), np.int32))
+    bad = _stat(100, 100)
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        futs = [pool.submit(rebuilder.observe, bad) for _ in range(8)]
+        for f in futs:
+            f.result()
+        gate.set()
+        rebuilder.drain(timeout=10)
+    rebuilder.close()
+    assert len(calls) == 1  # one rebuild ran
+    deployed = [e for e in rebuilder.events if e.deployed]
+    skipped = [e for e in rebuilder.events if e.skipped == "in_flight"]
+    assert len(deployed) == 1
+    assert len(deployed) + len(skipped) == len(rebuilder.events)
+    assert len(rebuilder.events) >= 2  # the hammer produced skips
+
+
+def test_auto_rebuilder_on_event_may_reenter_the_rebuilder():
+    """Regression: events are recorded OUTSIDE the rebuilder lock, so an
+    on_event callback that calls back into the rebuilder (drain, status)
+    must not deadlock — neither on the deployed event nor on in-flight
+    skips."""
+    reentered = []
+
+    def on_event(ev):
+        # both calls take the rebuilder's internal lock
+        assert rebuilder.drain(timeout=5)
+        rebuilder.observe(_stat(0, 100))  # healthy: no nested trigger
+        reentered.append(ev)
+
+    rebuilder = AutoRebuilder(
+        types.SimpleNamespace(
+            rebuild=lambda *a, **k: types.SimpleNamespace(swapped=True)
+        ),
+        workload=None,
+        config=DriftConfig(window=2, min_fill=1, abs_threshold=0.5,
+                           rel_degradation=None, hysteresis=1, cooldown=0),
+        executor="sync",
+        on_event=on_event,
+    )
+    rebuilder.add_records(np.ones((4, 2), np.int32))
+    done = []
+    t = threading.Thread(
+        target=lambda: done.append(rebuilder.observe(_stat(100, 100)))
+    )
+    t.start()
+    t.join(timeout=10)
+    assert not t.is_alive(), "on_event callback deadlocked the rebuilder"
+    assert len(reentered) == 1 and done[0].triggered
+    rebuilder.close()
+
+
+def test_auto_rebuilder_surfaces_errors_and_empty_reservoir():
+    def boom(records, workload, **kw):
+        raise RuntimeError("builder exploded")
+
+    cfg = DriftConfig(window=1, min_fill=1, abs_threshold=0.1,
+                      rel_degradation=None, hysteresis=1, cooldown=0)
+    rebuilder = AutoRebuilder(
+        types.SimpleNamespace(rebuild=boom), workload=None, config=cfg,
+        executor="sync",
+    )
+    rebuilder.observe(_stat(100, 100))  # empty reservoir: rebuild skipped
+    assert rebuilder.events[-1].skipped == "empty_reservoir"
+    rebuilder.add_records(np.ones((4, 2), np.int32))
+    rebuilder.observe(_stat(100, 100))
+    ev = rebuilder.events[-1]
+    assert "RuntimeError: builder exploded" in ev.error
+    assert not ev.deployed
+    rebuilder.close()

@@ -335,6 +335,90 @@ def test_rebuild_never_policy_and_validation():
         svc.rollback()
 
 
+def test_rollback_and_release_name_retained_generations():
+    """Unknown / already-released generations must raise ValueError naming
+    what IS retained — not leak a bare KeyError from the version dict."""
+    _, records, cuts, work = _setup(43)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    svc.rebuild(records, work, cuts=cuts, min_block=20, swap="always")
+    with pytest.raises(ValueError, match=r"generation 99.*retained: \(1, 2\)"):
+        svc.rollback(99)
+    with pytest.raises(ValueError, match=r"generation 99.*retained: \(1, 2\)"):
+        svc.release(99)
+    svc.release(1)
+    with pytest.raises(ValueError, match="unknown or released generation 1"):
+        svc.rollback(1)  # released: no longer a rollback target
+
+
+def test_release_refcounts_shared_tree_across_generations():
+    """Regression: releasing one of two generations that deploy the SAME
+    tree object (same plan signature) must not evict the other's warm
+    plans — eviction only fires when the last holder is released."""
+    _, records, cuts, work = _setup(47)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=60
+    )
+    shared = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    gen_a = svc.swap(shared)
+    gen_b = svc.swap(shared)  # re-deploy: two generations, one tree
+    sig = planlib.tree_signature(shared.tree)
+    svc.route(records, backend="jax")
+    svc.route_queries(work, backend="jax")
+    n_shared = sum(
+        1 for k in svc.plans._plans
+        if isinstance(k, PlanKey) and k.sig == sig
+    )
+    assert n_shared > 0
+
+    # releasing the first holder must evict nothing…
+    assert svc.release(gen_a) == 0
+    assert sum(
+        1 for k in svc.plans._plans
+        if isinstance(k, PlanKey) and k.sig == sig
+    ) == n_shared
+    # …and the surviving generation still serves fully warm
+    misses0 = svc.plans.stats()["misses"]
+    svc.route(records, backend="jax")
+    assert svc.plans.stats()["misses"] == misses0
+
+    # once the LAST holder goes, the plans go with it
+    final = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=25
+    )
+    svc.swap(final)
+    assert svc.release(gen_b) == n_shared
+
+
+def test_swap_if_live_is_exactly_one_winner_per_baseline():
+    """CAS hammer: concurrent deploys against one observed baseline must
+    admit exactly one winner per round — the foundation the drift
+    auto-rebuilder's no-double-swap guarantee rests on."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    _, records, cuts, work = _setup(53)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, min_block=30
+    )
+    candidates = [
+        build_layout(records, work, strategy="random", cuts=cuts,
+                     min_block=30, seed=s)
+        for s in range(8)
+    ]
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        for _ in range(5):  # rounds, each with a fresh observed baseline
+            baseline = svc._live
+            got = list(pool.map(
+                lambda b: svc._swap_if_live_is(baseline, b), candidates
+            ))
+            wins = [g for g in got if g is not None]
+            assert len(wins) == 1  # exactly one deploy per baseline
+            assert svc.generation == wins[0]
+
+
 def test_rebuild_if_better_is_stale_safe():
     """A concurrent swap mid-rebuild invalidates the scored baseline — the
     rebuild must not deploy its candidate on top of the newer tree."""

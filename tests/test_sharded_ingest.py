@@ -37,7 +37,8 @@ def _frozen(seed=0):
     return schema, records, cuts, tree.freeze()
 
 
-def _shard_states(base, records, bounds, batch=41, collect_blocks=False):
+def _shard_states(base, records, bounds, batch=41, collect_blocks=False,
+                  probe=None):
     """One ShardState per contiguous [bounds[i], bounds[i+1]) slice."""
     states = []
     for i in range(len(bounds) - 1):
@@ -46,6 +47,7 @@ def _shard_states(base, records, bounds, batch=41, collect_blocks=False):
             LayoutEngine(replicate_tree(base), backend="numpy"),
             shard_id=i,
             collect_blocks=collect_blocks,
+            probe=probe,
         )
         states.append(ing.run(micro_batches(part, batch)))
     return states
@@ -132,13 +134,22 @@ def test_shard_slices_cover_stream_contiguously():
 
 def test_shard_state_pickles_and_roundtrips_npz(tmp_path):
     """Process-pool and cross-host shipping: pure-numpy state survives
-    pickle and npz round trips bit-identically, chunks included."""
-    _, records, _, base = _frozen(3)
-    (state,) = _shard_states(
-        base, records, [0, records.shape[0]], collect_blocks=True
+    pickle and npz round trips bit-identically, chunks and window-stat
+    partials included."""
+    schema, records, _, base = _frozen(3)
+    rng = np.random.default_rng(3)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(3))
     )
+    probe = LayoutEngine(base, backend="numpy").observation_probe(work)
+    (state,) = _shard_states(
+        base, records, [0, records.shape[0]], collect_blocks=True,
+        probe=probe,
+    )
+    assert state.obs.capacity == records.shape[0] * len(work)
     clone = pickle.loads(pickle.dumps(state))
     assert states_bit_identical(clone, state)
+    assert clone.obs == state.obs
 
     path = str(tmp_path / "shard.npz")
     state.save(path)
@@ -146,6 +157,7 @@ def test_shard_state_pickles_and_roundtrips_npz(tmp_path):
     assert states_bit_identical(loaded, state)
     assert loaded.shard_ids == state.shard_ids
     assert loaded.n_records == state.n_records
+    assert loaded.obs == state.obs
     assert sorted(loaded.chunks) == sorted(state.chunks)
     for b in state.chunks:
         for (sid_a, rows_a), (sid_b, rows_b) in zip(
@@ -249,6 +261,82 @@ def test_sharded_ingest_tighten_false_leaves_tree_untouched():
     np.testing.assert_array_equal(replica.leaf_lo, lo0)
     np.testing.assert_array_equal(replica.leaf_hi, hi0)
     assert planlib.desc_version(replica) == v0
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_sharded_window_stats_bit_identical_to_single_stream(k):
+    """Drift accounting under sharding: the merged Eq. 1 WindowStat
+    partials equal the single-stream per-batch totals bit for bit (exact
+    int sums against one replicated ObservationProbe)."""
+    schema, records, _, base = _frozen(21)
+    rng = np.random.default_rng(21)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(6))
+    )
+    rep1 = LayoutEngine(replicate_tree(base), backend="numpy").ingest(
+        micro_batches(records, 67), observe=work
+    )
+    assert rep1.observation is not None and rep1.observation.capacity > 0
+    repk = sharded_ingest(
+        LayoutEngine(replicate_tree(base), backend="numpy"), records, k,
+        batch=67, observe=work,
+    )
+    assert repk.observation == rep1.observation
+    # the probe itself is exact: totals match a from-scratch Eq. 1 count
+    eng = LayoutEngine(replicate_tree(base), backend="numpy")
+    per_leaf = eng.query_hits(work).sum(axis=1).astype(np.int64)
+    want = int(per_leaf[eng.route(records)].sum())
+    assert rep1.observation.scanned_tuples == want
+
+
+def test_service_ingest_sharded_detects_stale_generation():
+    """A hot swap while shards are routing must not let the merged
+    tightening silently mutate the outgoing tree: the publish is skipped
+    and the report says so."""
+    from repro.engine import plan as planlib
+    from repro.service import build_layout
+
+    schema, records, cuts, _ = _frozen(23)
+    rng = np.random.default_rng(23)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(4))
+    )
+    svc = LayoutService.build(
+        records, work, strategy="greedy", backend="numpy", cuts=cuts,
+        min_block=30,
+    )
+    racing = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=20
+    )
+
+    class SwapBetweenRouteAndPublish:
+        """Executor whose map() completes the shards, then swaps."""
+
+        def map(self, fn, *its):
+            out = list(map(fn, *its))
+            svc.swap(racing)
+            return out
+
+    old_tree = svc.tree
+    lo0, hi0 = old_tree.leaf_lo.copy(), old_tree.leaf_hi.copy()
+    v0 = planlib.desc_version(old_tree)
+    rep = svc.ingest_sharded(
+        records, 3, batch=64, executor=SwapBetweenRouteAndPublish()
+    )
+    assert rep.stale_generation and not rep.published
+    # neither the outgoing nor the new live tree was mutated…
+    np.testing.assert_array_equal(old_tree.leaf_lo, lo0)
+    np.testing.assert_array_equal(old_tree.leaf_hi, hi0)
+    assert planlib.desc_version(old_tree) == v0
+    assert svc.tree is racing.tree
+    # …but the run's aggregates are still reported
+    bids = old_tree.route(records)
+    np.testing.assert_array_equal(
+        rep.block_sizes, np.bincount(bids, minlength=old_tree.n_leaves)
+    )
+    # a run with no interference still publishes
+    rep2 = svc.ingest_sharded(records, 3, batch=64)
+    assert rep2.published and not rep2.stale_generation
 
 
 def test_sharded_ingest_zero_retraces_when_warm():
