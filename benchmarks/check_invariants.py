@@ -1,0 +1,237 @@
+"""Bench-invariants gate: diff smoke-run *counters* against expectations.
+
+The smoke benchmarks assert their own acceptance criteria, but the
+*counters* behind those claims (warm retraces, scanned fractions,
+bit-identity flags, deployed rebuild counts) could still drift silently —
+a refactor that, say, starts retracing one bucket per run or shifts a
+scanned fraction would pass a `>= / <=` gate while eroding the recorded
+behavior.  This checker pins the deterministic counter subset of every
+``BENCH_*_smoke.json`` against ``benchmarks/smoke_expectations.json`` and
+fails CI on any regression.  Timings are deliberately never compared —
+only exact counters (ints, bools, int-ratio floats) that are reproducible
+across machines because every benchmark path is bit-deterministic
+(fixed seeds, integer data, bit-identical backends).
+
+    PYTHONPATH=src python -m benchmarks.check_invariants            # gate
+    PYTHONPATH=src python -m benchmarks.check_invariants --update   # re-pin
+
+``--update`` regenerates the expectations file from the smoke JSONs in the
+repo root — run the smoke benchmarks first, eyeball the diff, commit it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+EXPECTATIONS = pathlib.Path(__file__).resolve().parent / (
+    "smoke_expectations.json"
+)
+
+# Per smoke file: "equals" counters are pinned to the committed value in
+# smoke_expectations.json; "true" paths must simply be truthy (they are
+# the benchmarks' own acceptance booleans — re-checked here so a benchmark
+# that stops asserting can't rot unnoticed).
+SPEC: dict[str, dict[str, list[str]]] = {
+    "BENCH_query_routing_smoke.json": {
+        "equals": [
+            "n_queries",
+            "n_blocks",
+            "warm_retraces",
+            "batched.numpy.warm_retraces",
+            "batched.jax.warm_retraces",
+        ],
+        "true": [
+            "assertions.n_queries_ge_64",
+            "assertions.speedup_ge_min",
+            "assertions.zero_warm_retraces",
+        ],
+    },
+    "BENCH_routing_throughput_smoke.json": {
+        "equals": [
+            "n_blocks",
+            "backends.numpy.warm_retraces",
+            "backends.jax.warm_retraces",
+            "backends.pallas.warm_retraces",
+        ],
+        "true": [],
+    },
+    "BENCH_sharded_ingest_smoke.json": {
+        "equals": [
+            "n_records",
+            "n_blocks",
+            "shards.1.bit_identical",
+            "shards.2.bit_identical",
+            "shards.4.bit_identical",
+            "shards.8.bit_identical",
+            "shards.1.retraces",
+            "shards.2.retraces",
+            "shards.4.retraces",
+            "shards.8.retraces",
+        ],
+        "true": [
+            "assertions.bit_identical_all_k",
+            "assertions.zero_retraces_all_k",
+        ],
+    },
+    "BENCH_drift_rebuild_smoke.json": {
+        "equals": [
+            "rebuilds_deployed",
+            "swap_batches",
+            "trigger_reasons",
+            "retraces_outside_swap",
+            "recovered_scanned",
+            "oracle_scanned",
+            "single_stream_observation",
+        ],
+        "true": [
+            "assertions.auto_rebuild_fired",
+            "assertions.recovered_within_gate",
+            "assertions.zero_retraces_outside_swap",
+            "assertions.sharded_obs_bit_identical",
+        ],
+    },
+    "BENCH_workload_tracking_smoke.json": {
+        "equals": [
+            "rebuilds_deployed",
+            "swap_batches",
+            "retraces_outside_swap",
+            "recovered_scanned",
+            "oracle_scanned",
+            "tracker.n_keys",
+            "tracker.generation",
+            "tracker.queries_seen",
+            "tracker.inferred_queries",
+        ],
+        "true": [
+            "assertions.auto_rebuild_fired",
+            "assertions.recovered_within_gate",
+            "assertions.zero_retraces_outside_swap",
+            "assertions.tracker_merge_bit_identical",
+            "assertions.top_signatures_are_live",
+        ],
+    },
+}
+
+_MISSING = object()
+
+
+def lookup(doc, path: str):
+    cur = doc
+    for part in path.split("."):
+        if isinstance(cur, dict) and part in cur:
+            cur = cur[part]
+        else:
+            return _MISSING
+    return cur
+
+
+def values_match(got, want) -> bool:
+    if isinstance(want, float) or isinstance(got, float):
+        try:
+            return math.isclose(
+                float(got), float(want), rel_tol=1e-9, abs_tol=1e-12
+            )
+        except (TypeError, ValueError):
+            return False
+    return got == want
+
+
+def check(root: pathlib.Path) -> int:
+    if not EXPECTATIONS.exists():
+        print(f"[bench-invariants] missing {EXPECTATIONS}; run --update")
+        return 1
+    expected = json.loads(EXPECTATIONS.read_text())
+    failures = 0
+    for fname, spec in SPEC.items():
+        path = root / fname
+        if not path.exists():
+            print(
+                f"[bench-invariants] FAIL {fname}: not found — run the "
+                f"smoke benchmarks first"
+            )
+            failures += 1
+            continue
+        doc = json.loads(path.read_text())
+        pinned = expected.get(fname, {})
+        for key in spec["equals"]:
+            got = lookup(doc, key)
+            want = pinned.get(key, _MISSING)
+            if want is _MISSING:
+                print(
+                    f"[bench-invariants] FAIL {fname}: no expectation "
+                    f"pinned for {key!r} — run --update and commit"
+                )
+                failures += 1
+            elif got is _MISSING:
+                print(f"[bench-invariants] FAIL {fname}: {key!r} missing")
+                failures += 1
+            elif not values_match(got, want):
+                print(
+                    f"[bench-invariants] FAIL {fname}: {key} = {got!r}, "
+                    f"expected {want!r}"
+                )
+                failures += 1
+        for key in spec["true"]:
+            got = lookup(doc, key)
+            if got is _MISSING or not got:
+                print(
+                    f"[bench-invariants] FAIL {fname}: {key} is "
+                    f"{'missing' if got is _MISSING else got!r}, "
+                    f"expected truthy"
+                )
+                failures += 1
+    n_checks = sum(
+        len(s["equals"]) + len(s["true"]) for s in SPEC.values()
+    )
+    if failures:
+        print(f"[bench-invariants] {failures}/{n_checks} checks FAILED")
+    else:
+        print(
+            f"[bench-invariants] all {n_checks} counter checks passed "
+            f"({len(SPEC)} smoke files)"
+        )
+    return 1 if failures else 0
+
+
+def update(root: pathlib.Path) -> int:
+    out: dict[str, dict] = {}
+    for fname, spec in SPEC.items():
+        path = root / fname
+        if not path.exists():
+            print(
+                f"[bench-invariants] cannot update: {fname} not found — "
+                f"run the smoke benchmarks first"
+            )
+            return 1
+        doc = json.loads(path.read_text())
+        pinned = {}
+        for key in spec["equals"]:
+            got = lookup(doc, key)
+            if got is _MISSING:
+                print(f"[bench-invariants] cannot pin {fname}:{key}")
+                return 1
+            pinned[key] = got
+        out[fname] = pinned
+    EXPECTATIONS.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"[bench-invariants] pinned expectations -> {EXPECTATIONS}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(ROOT),
+                    help="directory holding the BENCH_*_smoke.json files")
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin expectations from the current smoke runs")
+    args = ap.parse_args()
+    root = pathlib.Path(args.root)
+    return update(root) if args.update else check(root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,288 @@
+"""Workload auto-detection: stale declared workload, shifted live queries.
+
+The acceptance gate for ``repro.service.tracker``: a LayoutService serves a
+qd-tree built for a shipdate-range workload while TPC-H-like records stream
+in.  The *declared* workload never changes — but the **live query stream**
+does: halfway through, users stop asking shipdate ranges and start asking
+extendedprice ranges.  Nobody tells the drift monitor.  The
+:class:`WorkloadTracker` must infer the live mix from the serving path
+alone (``LayoutService.serve`` records each query's canonicalized predicate
+signature), the ``workload="auto"`` AutoRebuilder must score per-batch
+Eq. 1 drift against that inferred mix, notice the degradation, and rebuild
+on a workload *re-inferred at trigger time* — recovering to within
+**1.2×** of an oracle that was handed the true post-shift workload.
+
+Asserted and recorded in ``BENCH_workload_tracking.json``:
+
+  * ≥1 auto-rebuild deploys after the shift, with NO declared workload in
+    the loop (the monitor/rebuilder only ever see ``"auto"``),
+  * recovered scanned fraction (true post-shift mix) ≤ 1.2× the oracle's,
+  * tracking adds ZERO warm-plan retraces (serving, recording, inference,
+    and drift probes all run from cache between generation swaps),
+  * k-way tracker merge is BIT-IDENTICAL to single-stream tracking for
+    k ∈ {1, 2, 4, 8} (the TrackerState exact-int generation algebra).
+
+    PYTHONPATH=src python -m benchmarks.workload_tracking           # bench
+    PYTHONPATH=src python -m benchmarks.workload_tracking --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import query as qry
+from repro.data import datagen
+from repro.engine import LayoutEngine, pad_bucket, trace_counts
+from repro.engine import plan as planlib
+from repro.service import (
+    DriftConfig,
+    LayoutService,
+    TrackerConfig,
+    WorkloadTracker,
+    build_layout,
+    merge_states,
+)
+from repro.service.tracker import query_signatures
+
+from benchmarks.drift_rebuild import batches_of, range_workload
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_workload_tracking.json"
+)
+
+SHARD_COUNTS = (1, 2, 4, 8)
+ORACLE_RATIO = 1.2
+ROUND_QUERIES = 8  # live queries served per micro-batch round
+
+
+def serve_round(rng, workload: qry.Workload) -> qry.Workload:
+    """One serving round: a sample of what users are asking right now."""
+    idx = rng.integers(0, len(workload), ROUND_QUERIES)
+    return qry.Workload(
+        workload.schema, tuple(workload.queries[int(i)] for i in idx)
+    )
+
+
+def replay_sharded(
+    rounds: list[qry.Workload], config: TrackerConfig, k: int
+):
+    """The same serve stream split round-robin over k shard trackers."""
+    schema = rounds[0].schema
+    trackers = [WorkloadTracker(schema, config) for _ in range(k)]
+    for rnd in rounds:
+        for j, q in enumerate(rnd.queries):
+            trackers[j % k].record(qry.Workload(schema, (q,)))
+        for t in trackers:
+            t.tick()
+    return merge_states([t.snapshot() for t in trackers])
+
+
+def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
+    rows, batch, min_block = (12_000, 256, 150) if smoke else (
+        48_000, 512, 600
+    )
+    schema, records = datagen.make_tpch_like(rows, seed=seed)
+    # the declared workload (phase A, shipdate) goes STALE: live queries
+    # shift to extendedprice ranges and nobody updates any declaration
+    work_a = range_workload(schema, dim=0, n_queries=20, frac=0.04,
+                            seed=seed + 1)
+    work_b = range_workload(schema, dim=5, n_queries=20, frac=0.04,
+                            seed=seed + 2)
+    shift_at = (rows // 2 // batch) * batch
+    phase_b = records[shift_at:]
+
+    boot = records[: max(rows // 5, 4 * min_block)]
+    svc = LayoutService.build(
+        boot, work_a, strategy="greedy", backend=backend,
+        min_block=max(min_block * boot.shape[0] // rows, 50), seed=seed,
+    )
+    print(
+        f"[workload_tracking] {rows} rows, batch={batch}, "
+        f"backend={backend}; stale-declared tree: {svc.tree.n_leaves} blocks"
+    )
+
+    tracker_cfg = TrackerConfig(
+        n_buckets=256, n_gens=32, decay=0.5, infer_top_k=20, infer_budget=64
+    )
+    tracker = svc.workload_tracker(tracker_cfg)
+    rebuilder = svc.auto_rebuilder(
+        "auto",  # no declared workload anywhere in the drift loop
+        tracker=tracker,
+        config=DriftConfig(
+            # absolute rule + deep hysteresis: by the time the trigger
+            # fires, the decayed sketch has seen enough post-shift rounds
+            # that the inferred mix ~= the true live mix (a hair-trigger
+            # rebuild would optimize for a half-observed blend)
+            window=8, min_fill=4, abs_threshold=0.5, rel_degradation=None,
+            hysteresis=4, cooldown=8,
+        ),
+        reservoir_capacity=phase_b.shape[0],
+        executor="sync",  # deterministic: rebuild fires inside observe()
+        rebuild_kw=dict(min_block=min_block, seed=seed),
+    )
+
+    def _warm(sample: np.ndarray) -> None:
+        """Compile the live generation's plans: the routing bucket, the
+        serve-round query geometry, and the (fixed-budget) inferred-mix
+        geometry — everything the steady-state loop touches."""
+        svc.engine.route(sample)
+        svc.engine.query_hits(serve_round(np.random.default_rng(0), work_a))
+        inferred = tracker.infer_workload()
+        if len(inferred):
+            svc.engine.query_hits(inferred)
+
+    # round 0 of the serve stream: the tracker must know *something*
+    # before drift accounting can score batches against an inferred mix
+    rng = np.random.default_rng(seed + 3)
+    rounds = [serve_round(rng, work_a)]
+    svc.serve(rounds[0], tracker=tracker)
+    _warm(records[: min(pad_bucket(batch, 64), rows)])
+
+    rates: list[float] = []
+    swap_calls: list[int] = []
+    retraces_outside_swap: dict = {}
+    gen_seen = svc.generation
+    t0 = trace_counts()
+    for i, b in enumerate(batches_of(records, batch)):
+        live = work_a if i * batch < shift_at else work_b  # silent shift
+        rounds.append(serve_round(rng, live))
+        svc.serve(rounds[-1], tracker=tracker)
+        rep = svc.ingest([b], monitor=rebuilder)
+        rates.append(rep.observation.scanned_fraction)
+        delta = planlib.trace_delta(t0, trace_counts())
+        if svc.generation != gen_seen:
+            # a rebuild deployed inside this call: compiling the new
+            # tree's plans is the swap cost — warm them, restart the
+            # outside-the-swap accounting
+            swap_calls.append(i)
+            gen_seen = svc.generation
+            _warm(b)
+        elif delta:
+            retraces_outside_swap[i] = delta
+        t0 = trace_counts()
+    rebuilder.drain()
+    rebuilder.close()
+
+    deployed = rebuilder.rebuilds_deployed
+    trigger_events = [e for e in rebuilder.events if not e.skipped]
+    recovered = svc.skip_stats(phase_b, work_b, tighten=False)
+    oracle_build = build_layout(
+        phase_b, work_b, strategy="greedy", min_block=min_block, seed=seed
+    )
+    oracle = LayoutEngine(oracle_build.tree, backend=backend).skip_stats(
+        phase_b, work_b, tighten=False
+    )
+    ratio = (
+        recovered.scanned_fraction / oracle.scanned_fraction
+        if oracle.scanned_fraction
+        else float("inf")
+    )
+    print(
+        f"[workload_tracking] pre-shift window "
+        f"{min(rates[: len(rates) // 2]):.3f} → post-shift peak "
+        f"{max(rates):.3f}; {deployed} auto-rebuild(s) at batches "
+        f"{swap_calls}"
+    )
+    print(
+        f"[workload_tracking] recovered scanned "
+        f"{recovered.scanned_fraction:.4f} vs true-mix oracle "
+        f"{oracle.scanned_fraction:.4f} -> {ratio:.3f}x "
+        f"(gate {ORACLE_RATIO}x)"
+    )
+
+    # the inferred mix converged onto the live queries: every top
+    # signature the rebuild optimized for is a live (phase B) signature
+    live_sigs = set(query_signatures(work_b, tracker_cfg.n_buckets))
+    top = tracker.top_signatures(8)
+    top_is_live = all(sig in live_sigs for sig, _ in top)
+    for line in tracker.describe(3):
+        print(f"[workload_tracking] inferred: {line}")
+
+    # k-way tracker merge == single-stream tracking, bit for bit
+    single = replay_sharded(rounds, tracker_cfg, 1)
+    assert single.equals(tracker.snapshot()), (
+        "replayed stream diverged from the live tracker"
+    )
+    merge_identical = {}
+    for k in SHARD_COUNTS:
+        merged = replay_sharded(rounds, tracker_cfg, k)
+        merge_identical[k] = merged.equals(single)
+        print(
+            f"[workload_tracking] k={k}: {merged.n_keys} keys, "
+            f"gen {merged.generation}, bit-identical {merge_identical[k]}"
+        )
+
+    state = tracker.snapshot()
+    results = {
+        "rows": rows,
+        "batch": batch,
+        "backend": backend,
+        "smoke": smoke,
+        "shift_at_row": shift_at,
+        "round_queries": ROUND_QUERIES,
+        "pre_shift_rate_min": min(rates[: len(rates) // 2]),
+        "post_shift_rate_peak": max(rates),
+        "batch_rates": rates,
+        "swap_batches": swap_calls,
+        "rebuilds_deployed": deployed,
+        "trigger_reasons": [e.decision.reason for e in trigger_events],
+        "recovered_scanned": recovered.scanned_fraction,
+        "oracle_scanned": oracle.scanned_fraction,
+        "oracle_ratio": ratio,
+        "retraces_outside_swap": retraces_outside_swap,
+        "tracker": {
+            "n_keys": state.n_keys,
+            "generation": state.generation,
+            "queries_seen": state.queries_seen,
+            "n_buckets": tracker_cfg.n_buckets,
+            "inferred_queries": len(tracker.infer_workload()),
+            "top_signatures_are_live": top_is_live,
+        },
+        "assertions": {
+            "auto_rebuild_fired": deployed >= 1,
+            "recovered_within_gate": ratio <= ORACLE_RATIO,
+            "zero_retraces_outside_swap": not retraces_outside_swap,
+            "tracker_merge_bit_identical": all(merge_identical.values()),
+            "top_signatures_are_live": top_is_live,
+            "shard_counts": list(SHARD_COUNTS),
+            "oracle_ratio_gate": ORACLE_RATIO,
+        },
+    }
+    assert deployed >= 1, (
+        "the shifted live stream did not auto-trigger a rebuild"
+    )
+    assert ratio <= ORACLE_RATIO, (
+        f"recovered {recovered.scanned_fraction:.4f} is {ratio:.3f}x the "
+        f"true-mix oracle's {oracle.scanned_fraction:.4f} "
+        f"(gate {ORACLE_RATIO}x)"
+    )
+    assert not retraces_outside_swap, (
+        f"tracking caused warm-plan retraces: {retraces_outside_swap}"
+    )
+    assert all(merge_identical.values()), (
+        f"sharded tracker states diverged: {merge_identical}"
+    )
+    assert top_is_live, (
+        f"inferred top signatures are not all live queries: {top}"
+    )
+
+    # smoke runs (CI) must not clobber the committed bench-scale numbers
+    out = OUT.with_stem(OUT.stem + "_smoke") if smoke else OUT
+    out.write_text(json.dumps(results, indent=2))
+    print(f"[workload_tracking] wrote {out}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="jax",
+                    choices=("numpy", "jax", "pallas"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (same assertions)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, backend=args.backend, seed=args.seed)

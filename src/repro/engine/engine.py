@@ -215,6 +215,7 @@ class LayoutEngine:
         self,
         workload: qry.Workload | qry.WorkloadTensors,
         backend: Optional[str] = None,
+        track=None,  # service.tracker.WorkloadTracker | None
         **opts,
     ) -> list[np.ndarray]:
         """Per-query BID IN (...) lists for a whole workload (Sec 3.3).
@@ -223,26 +224,38 @@ class LayoutEngine:
         and one ``query_hits`` dispatch serve every query, so the jitted
         backends amortize compilation across the workload (the p50 latency
         fix flagged in ROADMAP; see ``benchmarks/query_routing.py``).
+
+        ``track`` is the workload auto-detection observation hook: each
+        served query's canonical predicate signature is recorded into the
+        given :class:`~repro.service.tracker.WorkloadTracker` (pure host
+        numpy — no backend dispatch, no plan-cache traffic, so tracking a
+        warm serving path never retraces).
         """
         wt = (
             workload
             if isinstance(workload, qry.WorkloadTensors)
             else self._tensorize(workload)
         )
+        if track is not None:
+            track.record(workload, cuts=self.tree.cuts)
         hits = self.query_hits(wt, backend=backend, **opts)
         return [
             np.nonzero(hits[:, q])[0].astype(np.int32)
             for q in range(wt.n_queries)
         ]
 
-    def route_query(self, query: qry.Query) -> np.ndarray:
+    def route_query(self, query: qry.Query, track=None) -> np.ndarray:
         """BID IN (...) list for one query — 1-query ``route_queries``.
 
         Stays on the numpy backend (a single query never amortizes a jit
         dispatch) and tensorizes directly so one-shot queries don't churn
-        the workload-tensor LRU.
+        the workload-tensor LRU.  ``track`` records the query into a
+        :class:`~repro.service.tracker.WorkloadTracker` exactly as the
+        batched path does.
         """
         wl = qry.Workload(self.tree.schema, (query,))
+        if track is not None:
+            track.record(wl, cuts=self.tree.cuts)
         return self.route_queries(
             wl.tensorize(self.tree.cuts), backend="numpy"
         )[0]

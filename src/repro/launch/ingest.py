@@ -12,6 +12,22 @@ without retracing, thanks to the power-of-two plan-cache buckets.
 
 Prints per-phase throughput plus the engine's plan-cache/trace counters and
 (optionally) persists the ingested blocks as a BlockStore.
+
+Workload auto-detection (``repro.service.tracker``): ``--track-workload``
+simulates live traffic — between ingest rounds, query batches sampled from
+the workload are *served* through ``LayoutService.serve`` and recorded into
+a WorkloadTracker; the inferred top-of-mix is printed at the end.
+``--workload auto`` goes further: the drift monitor is given NO declared
+workload at all — per-batch Eq. 1 accounting and any auto-rebuild score
+against the tracker-inferred live mix (re-inferred at trigger time).
+
+    # observe the serving path, print the inferred mix
+    PYTHONPATH=src python -m repro.launch.ingest --rows 30000 \
+        --track-workload
+
+    # fully self-optimizing: drift + rebuilds driven by the inferred mix
+    PYTHONPATH=src python -m repro.launch.ingest --rows 30000 \
+        --workload auto --drift --drift-abs 0.5
 """
 
 from __future__ import annotations
@@ -22,6 +38,7 @@ import json
 
 import numpy as np
 
+from repro.core import query as qry
 from repro.data import datagen, workload as wl
 from repro.data.blocks import BlockBuffers
 from repro.engine import pad_bucket, trace_counts
@@ -29,7 +46,7 @@ from repro.service import DriftConfig, LayoutService
 
 
 def make_workload(name: str, rows: int, seed: int):
-    if name == "tpch":
+    if name in ("tpch", "auto"):  # auto: tpch data, tracker-inferred mix
         schema, records = datagen.make_tpch_like(rows, seed=seed)
         work, _ = wl.make_tpch_workload(schema, n_per_template=5, seed=seed)
         cuts = work.candidate_cuts(max_adv=4)
@@ -65,14 +82,57 @@ def micro_batches(records: np.ndarray, sizes: list[int]):
         i += b
 
 
+def serve_round(rng, work, n_queries: int) -> "qry.Workload":
+    """A live-traffic sample: what users are asking between ingest rounds."""
+    idx = rng.integers(0, len(work), n_queries)
+    return qry.Workload(
+        work.schema, tuple(work.queries[int(i)] for i in idx)
+    )
+
+
+def merge_round_reports(reports):
+    """Fold per-round ingest reports into one stream-level summary."""
+    traces: dict = {}
+    obs = None
+    for r in reports:
+        for name, n in r.traces.items():
+            traces[name] = traces.get(name, 0) + n
+        if r.observation is not None:
+            obs = r.observation if obs is None else obs.merge(r.observation)
+    return dataclasses.replace(
+        reports[-1],
+        n_records=sum(r.n_records for r in reports),
+        n_batches=sum(r.n_batches for r in reports),
+        wall_s=sum(r.wall_s for r in reports),
+        traces=traces,
+        observation=obs,
+    )
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--rows", type=int, default=60_000)
     ap.add_argument("--batch", type=int, default=2048,
                     help="mean micro-batch size (sizes jitter ±50%%)")
     ap.add_argument("--backend", default="jax",
                     choices=("numpy", "jax", "pallas"))
-    ap.add_argument("--workload", default="tpch")
+    ap.add_argument("--workload", default="tpch",
+                    choices=("tpch", "errorlog_int", "auto"),
+                    help="query workload; 'auto' serves tpch data but "
+                         "gives the drift loop NO declared workload — "
+                         "drift accounting and rebuilds score against the "
+                         "mix a WorkloadTracker infers from the serving "
+                         "path (implies --track-workload)")
+    ap.add_argument("--track-workload", action="store_true",
+                    help="serve sampled query batches through "
+                         "LayoutService.serve between ingest rounds, "
+                         "recording each query's predicate signature into "
+                         "a WorkloadTracker; prints the inferred mix")
+    ap.add_argument("--serve-queries", type=int, default=8,
+                    help="queries served (and tracked) per ingest round")
     ap.add_argument("--strategy", default="greedy",
                     help="layout construction strategy "
                          "(repro.service builder registry)")
@@ -126,11 +186,21 @@ def main() -> None:
         f"({frozen.n_leaves} blocks, depth {frozen.depth})"
     )
 
+    tracker = None
+    if args.track_workload or args.workload == "auto":
+        tracker = service.workload_tracker()
+        print(
+            "[ingest] workload tracking on: serving "
+            f"{args.serve_queries} sampled queries per round through "
+            "LayoutService.serve"
+        )
+
     monitor = None
     if args.drift:
         rel = args.drift_rel if args.drift_rel > 0 else None
         monitor = service.auto_rebuilder(
-            work,
+            "auto" if args.workload == "auto" else work,
+            tracker=tracker,
             config=DriftConfig(
                 window=args.drift_window,
                 min_fill=max(args.drift_window // 4, 1),
@@ -140,8 +210,15 @@ def main() -> None:
                 cooldown=args.drift_cooldown,
             ),
             reservoir_capacity=args.drift_reservoir,
-            rebuild_kw=dict(
-                cuts=cuts, min_block=args.min_block, seed=args.seed
+            # auto mode derives candidate cuts from the *inferred*
+            # workload at trigger time — pinning the declared cut table
+            # would defeat the point of inferring the mix
+            rebuild_kw=(
+                dict(min_block=args.min_block, seed=args.seed)
+                if args.workload == "auto"
+                else dict(
+                    cuts=cuts, min_block=args.min_block, seed=args.seed
+                )
             ),
         )
         print(
@@ -149,7 +226,8 @@ def main() -> None:
             f"abs={args.drift_abs} rel={rel} "
             f"hysteresis={args.drift_hysteresis} "
             f"cooldown={args.drift_cooldown} "
-            f"reservoir={args.drift_reservoir}"
+            f"reservoir={args.drift_reservoir} "
+            f"workload={'auto (tracker-inferred)' if args.workload == 'auto' else 'declared'}"
         )
 
     engine = service.engine
@@ -166,12 +244,25 @@ def main() -> None:
     buckets = {pad_bucket(s, 64) for s in sizes}
     for m in sorted(min(b, records.shape[0]) for b in buckets):
         engine.route(records[:m])
+    qrng = np.random.default_rng(args.seed + 7)
+    if tracker is not None:
+        # round 0 of live traffic: the tracker must know something before
+        # an auto-mode monitor can score batches against an inferred mix
+        # (also compiles the serve-round query geometry)
+        service.serve(
+            serve_round(qrng, work, args.serve_queries), tracker=tracker
+        )
     if monitor is not None:
-        # drift accounting probes the workload's query plan once per
-        # ingest run — compile it now so the stream itself stays warm
-        engine.query_hits(work)
+        # drift accounting probes the scored workload's query plan once
+        # per ingest run — compile the geometry it will actually probe
+        # (auto mode: the fixed-budget inferred mix, not the declared
+        # workload) so the stream itself stays warm
+        observed = monitor.current_workload()
+        engine.query_hits(
+            observed if observed is not None and len(observed) else work
+        )
     if args.shards > 1:
-        if monitor is None:
+        if monitor is None and tracker is None:
             shard_rounds = [service.ingest_sharded(
                 records, args.shards, batch=args.batch, buffers=buffers,
             )]
@@ -179,7 +270,8 @@ def main() -> None:
         else:
             # one sharded run yields ONE drift observation — stream in
             # rounds so the monitor sees a sequence it can trigger on
-            # (min_fill/hysteresis need consecutive observations)
+            # (min_fill/hysteresis need consecutive observations) and the
+            # tracker's decay generations advance with the stream
             n_rounds = max(args.drift_window, 4)
             chunk = max(-(-records.shape[0] // n_rounds), args.shards)
             shard_rounds = []
@@ -193,25 +285,16 @@ def main() -> None:
                         "[ingest] drift rebuild deployed; block buffers "
                         "restarted for the new generation"
                     )
+                if tracker is not None:
+                    service.serve(
+                        serve_round(qrng, work, args.serve_queries),
+                        tracker=tracker,
+                    )
                 shard_rounds.append(service.ingest_sharded(
                     records[s : s + chunk], args.shards, batch=args.batch,
                     buffers=buffers, monitor=monitor,
                 ))
-            traces_total: dict = {}
-            for r in shard_rounds:
-                for name, n in r.traces.items():
-                    traces_total[name] = traces_total.get(name, 0) + n
-            obs = shard_rounds[0].observation
-            for r in shard_rounds[1:]:
-                obs = obs.merge(r.observation) if obs is not None else None
-            report = dataclasses.replace(
-                shard_rounds[-1],
-                n_records=sum(r.n_records for r in shard_rounds),
-                n_batches=sum(r.n_batches for r in shard_rounds),
-                wall_s=sum(r.wall_s for r in shard_rounds),
-                traces=traces_total,
-                observation=obs,
-            )
+            report = merge_round_reports(shard_rounds)
         last = shard_rounds[-1]
         print(
             f"[ingest] {args.shards} shards routed in "
@@ -224,6 +307,35 @@ def main() -> None:
                 "[ingest] publish skipped for a round: the tree was "
                 "hot-swapped out mid-run (stale generation)"
             )
+    elif tracker is not None:
+        # live traffic interleaves with ingestion: serve a sampled query
+        # round, then ingest a chunk of the stream — every round closes
+        # one tracker decay generation, and an auto-mode monitor
+        # re-infers the mix it scores against at each round
+        n_rounds = max(args.drift_window, 8)
+        per_round = max(-(-len(sizes) // n_rounds), 1)
+        round_reports = []
+        off = 0
+        for r in range(0, len(sizes), per_round):
+            if service.tree is not frozen:
+                frozen = service.tree
+                buffers = BlockBuffers.for_tree(frozen)
+                print(
+                    "[ingest] drift rebuild deployed; block buffers "
+                    "restarted for the new generation"
+                )
+            round_sizes = sizes[r : r + per_round]
+            n_round = sum(round_sizes)
+            service.serve(
+                serve_round(qrng, work, args.serve_queries),
+                tracker=tracker,
+            )
+            round_reports.append(service.ingest(
+                micro_batches(records[off : off + n_round], round_sizes),
+                buffers=buffers, monitor=monitor,
+            ))
+            off += n_round
+        report = merge_round_reports(round_reports)
     else:
         report = service.ingest(
             micro_batches(records, sizes), buffers=buffers, monitor=monitor
@@ -268,6 +380,28 @@ def main() -> None:
             "triggers": len(monitor.events),
             "rebuilds_deployed": monitor.rebuilds_deployed,
             "generation": service.generation,
+            "workload": (
+                "auto" if args.workload == "auto" else "declared"
+            ),
+        }
+
+    tracker_summary = None
+    if tracker is not None:
+        state = tracker.snapshot()
+        inferred = tracker.infer_workload()
+        print(
+            f"[ingest] tracker: {state.n_keys} signatures over "
+            f"{state.queries_seen} served queries "
+            f"({state.generation} decay generations); inferred mix = "
+            f"{len(inferred)} weighted queries"
+        )
+        for line in tracker.describe(5):
+            print(f"[ingest] inferred: {line}")
+        tracker_summary = {
+            "queries_seen": state.queries_seen,
+            "n_keys": state.n_keys,
+            "generation": state.generation,
+            "inferred_queries": len(inferred),
         }
 
     # score the CURRENT live tree — a drift rebuild may have swapped it
@@ -315,6 +449,8 @@ def main() -> None:
         "scanned_fraction": stats.scanned_fraction,
         "rebuild": rebuild_summary,
         "drift": drift_summary,
+        "workload": args.workload,
+        "workload_tracking": tracker_summary,
     }
     print(json.dumps(summary))
 

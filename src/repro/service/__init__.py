@@ -8,6 +8,9 @@ Public surface:
   LayoutVersion / RebuildReport          — lifecycle artifacts
   DriftMonitor / DriftConfig / AutoRebuilder / RecordReservoir —
                                            drift-triggered auto-rebuild
+  WorkloadTracker / TrackerConfig / TrackerState —
+                                           workload auto-detection from the
+                                           serving path (inferred live mix)
 """
 
 from repro.service.builders import (  # noqa: F401
@@ -30,4 +33,12 @@ from repro.service.service import (  # noqa: F401
     LayoutService,
     LayoutVersion,
     RebuildReport,
+)
+from repro.service.tracker import (  # noqa: F401
+    TrackerConfig,
+    TrackerState,
+    WorkloadTracker,
+    merge_states,
+    query_signatures,
+    query_signatures_from_tensors,
 )

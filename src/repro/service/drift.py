@@ -291,7 +291,7 @@ class RebuildEvent:
     decision: DriftDecision
     report: object = None  # service.RebuildReport | None
     deployed: bool = False
-    skipped: str = ""  # "" | "in_flight" | "empty_reservoir"
+    skipped: str = ""  # "" | "in_flight" | "empty_reservoir" | "empty_workload"
     error: str = ""
     wall_s: float = 0.0
 
@@ -310,21 +310,41 @@ class AutoRebuilder:
     lazily, shut down by :meth:`close`); ``"sync"`` → rebuild inline in
     the observing thread (deterministic tests/benchmarks); otherwise any
     ``concurrent.futures`` executor.
+
+    ``workload`` may be the string ``"auto"``: instead of a declared
+    standing workload, drift accounting and rebuilds score against the
+    live query mix a :class:`~repro.service.tracker.WorkloadTracker`
+    infers from the serving path — :meth:`current_workload` re-infers it
+    at every ingest run and again at trigger time, so a rebuild optimizes
+    for what users are asking *now*, not what an operator once declared.
+    Pass ``tracker=`` (the tracker ``LayoutService.serve`` records into);
+    omitted, one is created via ``service.workload_tracker()`` and
+    exposed as ``rebuilder.tracker``.
     """
 
     def __init__(
         self,
         service,  # LayoutService (kept untyped: service imports this module)
-        workload,  # qry.Workload the monitor scores against
+        workload,  # qry.Workload | "auto" the monitor scores against
         config: Optional[DriftConfig] = None,
         reservoir: Optional[RecordReservoir] = None,
         reservoir_capacity: int = 65536,
         executor: Optional[Executor | str] = None,
         rebuild_kw: Optional[dict] = None,  # forwarded to service.rebuild
         on_event: Optional[Callable[[RebuildEvent], None]] = None,
+        tracker=None,  # tracker.WorkloadTracker (workload="auto")
     ):
         self.service = service
+        if isinstance(workload, str):
+            if workload != "auto":
+                raise ValueError(
+                    f"workload must be a Workload or 'auto', got "
+                    f"{workload!r}"
+                )
+            if tracker is None:
+                tracker = service.workload_tracker()
         self.workload = workload
+        self.tracker = tracker
         self.monitor = DriftMonitor(config)
         self.reservoir = (
             reservoir
@@ -341,13 +361,35 @@ class AutoRebuilder:
         self._own_executor: Optional[ThreadPoolExecutor] = None
 
     # -- stream plumbing -----------------------------------------------------
-    def set_workload(self, workload) -> None:
+    def set_workload(self, workload, tracker=None) -> None:
         """Point the monitor (and future rebuilds) at a new standing
-        workload.  Deliberately does NOT rebaseline: the window should now
-        show how badly the live tree serves the new queries — that
-        degradation is exactly the drift signal."""
+        workload (or ``"auto"`` + a tracker).  Deliberately does NOT
+        rebaseline: the window should now show how badly the live tree
+        serves the new queries — that degradation is exactly the drift
+        signal."""
+        if isinstance(workload, str) and workload != "auto":
+            raise ValueError(
+                f"workload must be a Workload or 'auto', got {workload!r}"
+            )
         with self._lock:
             self.workload = workload
+            if tracker is not None:
+                self.tracker = tracker
+            if workload == "auto" and self.tracker is None:
+                self.tracker = self.service.workload_tracker()
+
+    def current_workload(self):
+        """The workload drift accounting and rebuilds score against *right
+        now*: the declared one, or — with ``workload="auto"`` — the
+        tracker-inferred live mix (re-inferred on every call; the tracker
+        caches per version, so unchanged sketches cost nothing).  May be
+        empty before any queries were served — callers skip observation
+        then."""
+        with self._lock:
+            workload, tracker = self.workload, self.tracker
+        if isinstance(workload, str):
+            return tracker.infer_workload()
+        return workload
 
     def tee(
         self, batches: Iterable[np.ndarray]
@@ -408,8 +450,14 @@ class AutoRebuilder:
             if records.shape[0] == 0:
                 ev.skipped = "empty_reservoir"
                 return
+            # resolved at trigger time: an "auto" rebuild optimizes for
+            # the mix the tracker is seeing NOW, not at construction
+            workload = self.current_workload()
+            if workload is not None and len(workload) == 0:
+                ev.skipped = "empty_workload"
+                return
             report = self.service.rebuild(
-                records, self.workload, **self.rebuild_kw
+                records, workload, **self.rebuild_kw
             )
             ev.report = report
             ev.deployed = bool(report.swapped)

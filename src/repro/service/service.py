@@ -165,11 +165,44 @@ class LayoutService:
     def query_hits(self, workload, **kw) -> np.ndarray:
         return self._live.engine.query_hits(workload, **kw)
 
-    def route_query(self, query: qry.Query) -> np.ndarray:
-        return self._live.engine.route_query(query)
+    def route_query(self, query: qry.Query, **kw) -> np.ndarray:
+        return self._live.engine.route_query(query, **kw)
 
     def route_queries(self, workload, **kw) -> list[np.ndarray]:
         return self._live.engine.route_queries(workload, **kw)
+
+    def serve(
+        self, workload, tracker=None, tick: bool = True, **kw
+    ) -> list[np.ndarray]:
+        """Serve one batch of live queries: batched ``route_queries``
+        against the live tree, optionally observed into a
+        :class:`~repro.service.tracker.WorkloadTracker`.
+
+        This is the workload auto-detection seam: with ``tracker`` set,
+        each served query's canonical predicate signature is recorded, and
+        ``tick=True`` (default) closes the serving round afterwards — one
+        exponential-decay generation per ``serve`` call, so the inferred
+        mix follows what users are asking *now*.  Sharded serving gives
+        each worker its own tracker and folds the states
+        (``tracker.merge_state`` / ``repro.service.tracker.merge_states``)
+        — bit-identical to single-stream tracking, same algebra as
+        ``ShardState``.
+        """
+        lists = self._live.engine.route_queries(
+            workload, track=tracker, **kw
+        )
+        if tracker is not None and tick:
+            tracker.tick()
+        return lists
+
+    def workload_tracker(self, config=None):
+        """A :class:`~repro.service.tracker.WorkloadTracker` bound to the
+        live schema — pass it to :meth:`serve`/``route_queries(track=...)``
+        and to ``auto_rebuilder(workload="auto", tracker=...)`` to close
+        the queries-in → layouts-out loop without a declared workload."""
+        from repro.service.tracker import WorkloadTracker
+
+        return WorkloadTracker(self.tree.schema, config=config)
 
     def skip_stats(self, records, workload, **kw):
         return self._live.engine.skip_stats(records, workload, **kw)
@@ -192,7 +225,14 @@ class LayoutService:
         """
         live = self._live
         if monitor is not None:
-            kw.setdefault("observe", monitor.workload)
+            # a workload="auto" monitor resolves to the tracker-inferred
+            # live mix here, at the start of each run; an empty inference
+            # (nothing served yet) skips accounting rather than probing a
+            # zero-query workload
+            if "observe" not in kw:
+                observed = monitor.current_workload()
+                if observed is not None and len(observed):
+                    kw["observe"] = observed
 
             def _observe_if_live(stat):
                 if self._live is live:
@@ -237,8 +277,10 @@ class LayoutService:
         from repro.engine.sharded import sharded_ingest
 
         live = self._live  # consistent engine/tree view for the whole run
-        if monitor is not None:
-            kw.setdefault("observe", monitor.workload)
+        if monitor is not None and "observe" not in kw:
+            observed = monitor.current_workload()
+            if observed is not None and len(observed):
+                kw["observe"] = observed
         report = sharded_ingest(
             live.engine, records, n_shards, batch=batch,
             executor=executor, lock=self._lock,
@@ -256,6 +298,14 @@ class LayoutService:
         and the service becomes self-optimizing — skip-rate drift past the
         configured policy triggers a background ``rebuild`` whose
         deployment rides the same compare-and-swap as manual rebuilds.
+
+        ``workload`` is either a declared standing
+        :class:`~repro.core.query.Workload` or the string ``"auto"``:
+        then drift accounting and rebuilds score against the live mix a
+        :class:`~repro.service.tracker.WorkloadTracker` inferred from the
+        serving path (pass ``tracker=`` to share the one :meth:`serve`
+        records into; omitted, a fresh :meth:`workload_tracker` is
+        created and exposed as ``rebuilder.tracker``).
         """
         from repro.service.drift import AutoRebuilder
 

@@ -1,0 +1,489 @@
+"""Workload auto-detection tests: canonical signature extraction (atoms vs
+tensors parity, bucketing), TrackerState algebra (associative+commutative
+merge bit-identical across serving shard counts, tick/merge homomorphism,
+order-independent recording within a generation), deterministic inference,
+serialization round-trips, the route_queries/route_query/serve observation
+hooks, and the workload="auto" drift loop end to end."""
+
+import pickle
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers without hypothesis
+    from tests._hypothesis_shim import given, settings, st
+
+from repro.core import query as qry
+from repro.core.predicates import (
+    OP_EQ,
+    OP_GE,
+    OP_GT,
+    OP_LE,
+    OP_LT,
+    Column,
+    Schema,
+)
+from repro.core.query import AdvAtom, InAtom, Query, RangeAtom
+from repro.engine import LayoutEngine
+from repro.service import (
+    DriftConfig,
+    LayoutService,
+    TrackerConfig,
+    TrackerState,
+    WorkloadTracker,
+    build_layout,
+    merge_states,
+)
+from repro.service.tracker import (
+    bucket_hi,
+    bucket_lo,
+    query_from_signature,
+    query_signatures,
+    query_signatures_from_tensors,
+)
+
+SCHEMA = Schema((
+    Column("a", "numeric", 1000),
+    Column("b", "numeric", 1000),
+    Column("c", "categorical", 6),
+))
+
+
+def _range_query(dim, lo, width):
+    return Query.conjunction(
+        [RangeAtom(dim, OP_GE, lo), RangeAtom(dim, OP_LT, lo + width)]
+    )
+
+
+def _random_query(rng) -> Query:
+    atoms = []
+    dim = int(rng.integers(0, 2))
+    op = int(rng.choice([OP_LT, OP_LE, OP_GT, OP_GE, OP_EQ]))
+    atoms.append(RangeAtom(dim, op, int(rng.integers(1, 999))))
+    if rng.random() < 0.5:
+        atoms.append(RangeAtom(1 - dim, OP_GE, int(rng.integers(0, 500))))
+    if rng.random() < 0.4:
+        vals = rng.choice(6, size=int(rng.integers(1, 4)), replace=False)
+        atoms.append(InAtom(2, tuple(int(v) for v in vals)))
+    if rng.random() < 0.3:
+        atoms.append(AdvAtom(0, OP_LT, 1, polarity=bool(rng.random() < 0.5)))
+    return Query.conjunction(atoms)
+
+
+def _random_workload(seed, n=6) -> qry.Workload:
+    rng = np.random.default_rng(seed)
+    return qry.Workload(SCHEMA, tuple(_random_query(rng) for _ in range(n)))
+
+
+def _cfg(**kw) -> TrackerConfig:
+    base = dict(n_buckets=64, n_gens=8, decay=0.5)
+    base.update(kw)
+    return TrackerConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Canonical signatures
+# ---------------------------------------------------------------------------
+def test_bucket_edges_bracket_the_bound():
+    for dom in (7, 100, 2526, 10000):
+        for b in (4, 64, 256):
+            for v in (1, dom // 3, dom // 2, dom - 1):
+                lo, hi = bucket_lo(v, dom, b), bucket_hi(v, dom, b)
+                assert 0 <= lo <= v, (dom, b, v, lo)
+                assert v <= hi <= dom, (dom, b, v, hi)
+    # enough buckets ⇒ exact bounds
+    assert bucket_lo(123, 100, 256) == 123
+    assert bucket_hi(123, 100, 256) == 123
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_signatures_atoms_match_tensors(seed):
+    """The serving hot path records from WorkloadTensors; direct API users
+    record from Workload atoms — both must canonicalize identically (the
+    workload's own candidate cuts carry every advanced atom)."""
+    wl = _random_workload(seed)
+    cuts = wl.candidate_cuts()
+    from_atoms = query_signatures(wl, 64)
+    from_tensors = query_signatures_from_tensors(
+        wl.tensorize(cuts), SCHEMA, adv=cuts.adv, n_buckets=64
+    )
+    assert from_atoms == from_tensors
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_signature_roundtrips_to_equivalent_query(seed):
+    """query_from_signature(sig) must re-canonicalize to the same sig (the
+    signature space is a fixed point), and with enough buckets the
+    reconstructed query matches the original records exactly."""
+    wl = _random_workload(seed)
+    sigs = query_signatures(wl, 64)
+    rebuilt = qry.Workload(
+        SCHEMA, tuple(query_from_signature(s, SCHEMA) for s in sigs)
+    )
+    assert query_signatures(rebuilt, 64) == sigs
+    # exact-bucket round trip preserves semantics on data
+    exact = query_signatures(wl, 1 << 20)
+    rng = np.random.default_rng(seed + 1)
+    records = np.stack([
+        rng.integers(0, 1000, 500),
+        rng.integers(0, 1000, 500),
+        rng.integers(0, 6, 500),
+    ], axis=1).astype(np.int32)
+    for q, sig in zip(wl.queries, exact):
+        q2 = query_from_signature(sig, SCHEMA)
+        np.testing.assert_array_equal(
+            q.evaluate(records, SCHEMA), q2.evaluate(records, SCHEMA)
+        )
+
+
+def test_record_parity_when_adv_atom_missing_from_cuts():
+    """A query whose advanced atom is NOT in the cut table must map to the
+    same sketch key whether it is served as a Workload or pre-tensorized
+    (tensorize drops non-cut adv atoms; record() filters to match)."""
+    q = Query.conjunction(
+        [RangeAtom(0, OP_GE, 100), AdvAtom(0, OP_LT, 1)]
+    )
+    wl = qry.Workload(SCHEMA, (q,))
+    cuts = qry.Workload(
+        SCHEMA, (_range_query(0, 100, 60),)
+    ).candidate_cuts()  # no adv predicates
+    assert cuts.n_adv == 0
+    t_atoms = WorkloadTracker(SCHEMA, _cfg())
+    t_atoms.record(wl, cuts=cuts)
+    t_tensors = WorkloadTracker(SCHEMA, _cfg())
+    t_tensors.record(wl.tensorize(cuts), cuts=cuts)
+    assert t_atoms.snapshot().equals(t_tensors.snapshot())
+    # without a cut table, direct recording keeps the adv atom (richer
+    # signal for candidate-cut discovery)
+    t_free = WorkloadTracker(SCHEMA, _cfg())
+    t_free.record(wl)
+    (free_sig,) = (s for s, _ in t_free.top_signatures(1))
+    assert any(atom[0] == 2 for atom in free_sig[0])  # SIG_ADV kept
+
+
+def test_signatures_dedupe_near_identical_queries():
+    # same bucket ⇒ same key; different bucket ⇒ different key
+    a = query_signatures(
+        qry.Workload(SCHEMA, (_range_query(0, 100, 60),)), 10
+    )
+    b = query_signatures(
+        qry.Workload(SCHEMA, (_range_query(0, 103, 57),)), 10
+    )
+    c = query_signatures(
+        qry.Workload(SCHEMA, (_range_query(0, 400, 60),)), 10
+    )
+    assert a == b != c
+
+
+# ---------------------------------------------------------------------------
+# TrackerState algebra
+# ---------------------------------------------------------------------------
+def _replay(streams, cfg, k):
+    """Round-robin the per-round query lists over k trackers (each round is
+    one generation everywhere), then fold the shard states."""
+    trackers = [WorkloadTracker(SCHEMA, cfg) for _ in range(k)]
+    for rnd in streams:
+        for j, q in enumerate(rnd):
+            trackers[j % k].record(qry.Workload(SCHEMA, (q,)))
+        for t in trackers:
+            t.tick()
+    return merge_states([t.snapshot() for t in trackers])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_kway_merge_bit_identical_to_single_stream(seed):
+    rng = np.random.default_rng(seed)
+    streams = [
+        [_random_query(rng) for _ in range(int(rng.integers(1, 9)))]
+        for _ in range(5)
+    ]
+    cfg = _cfg()
+    single = _replay(streams, cfg, 1)
+    for k in (2, 4, 8):
+        merged = _replay(streams, cfg, k)
+        assert merged.equals(single), f"k={k} diverged"
+        # the inferred mix is a pure function of the state
+        assert (
+            merged.infer_workload(SCHEMA, top_k=8, budget=16).queries
+            == single.infer_workload(SCHEMA, top_k=8, budget=16).queries
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_recording_order_independent_within_generation(seed):
+    rng = np.random.default_rng(seed)
+    queries = [_random_query(rng) for _ in range(12)]
+    cfg = _cfg()
+    t1, t2 = WorkloadTracker(SCHEMA, cfg), WorkloadTracker(SCHEMA, cfg)
+    t1.record(qry.Workload(SCHEMA, tuple(queries)))
+    perm = rng.permutation(len(queries))
+    for i in perm:
+        t2.record(qry.Workload(SCHEMA, (queries[int(i)],)))
+    assert t1.snapshot().equals(t2.snapshot())
+    t1.tick(), t2.tick()
+    assert t1.snapshot().equals(t2.snapshot())
+
+
+def test_merge_associative_and_tick_homomorphism():
+    rng = np.random.default_rng(3)
+    cfg = _cfg()
+    states = []
+    for _ in range(3):
+        t = WorkloadTracker(SCHEMA, cfg)
+        for _ in range(int(rng.integers(1, 4))):
+            t.record(_random_workload(int(rng.integers(0, 100))))
+            t.tick()
+        t.record(_random_workload(int(rng.integers(0, 100))))
+        states.append(t.snapshot())
+    a, b, c = states
+    assert a.merge(b).merge(c).equals(a.merge(b.merge(c)))
+    assert a.merge(b).equals(b.merge(a))
+    # tick distributes over merge
+    ab = a.merge(b)
+    ab.tick()
+    a2, b2 = a.copy(), b.copy()
+    a2.tick(), b2.tick()
+    assert ab.equals(a2.merge(b2))
+    # configs must match
+    with pytest.raises(ValueError):
+        a.merge(TrackerState.fresh(_cfg(decay=0.25)))
+
+
+def test_decay_forgets_and_generations_age_out():
+    cfg = _cfg(n_gens=3, decay=0.5)
+    t = WorkloadTracker(SCHEMA, cfg)
+    old, new = _range_query(0, 100, 50), _range_query(1, 200, 50)
+    t.record(qry.Workload(SCHEMA, (old,)))
+    t.tick()
+    t.record(qry.Workload(SCHEMA, (new,)))
+    (sig_old,) = query_signatures(qry.Workload(SCHEMA, (old,)), 64)
+    (sig_new,) = query_signatures(qry.Workload(SCHEMA, (new,)), 64)
+    w = t.snapshot().weights()
+    assert w[sig_new] == 1.0 and w[sig_old] == 0.5  # decayed once
+    t.tick(3)  # beyond n_gens: exact zero, key forgotten
+    assert sig_old not in t.snapshot().counts
+    assert t.snapshot().n_keys == 0
+
+
+def test_prune_keeps_heaviest_keys():
+    t = WorkloadTracker(SCHEMA, _cfg(max_keys=2))
+    heavy = _range_query(0, 100, 50)
+    t.record(qry.Workload(SCHEMA, (heavy,) * 5))
+    t.record(qry.Workload(SCHEMA, (_range_query(0, 300, 50),) * 3))
+    t.record(qry.Workload(SCHEMA, (_range_query(0, 600, 50),)))
+    t.tick()  # prunes past max_keys
+    state = t.snapshot()
+    assert state.n_keys == 2
+    (sig_heavy,) = query_signatures(qry.Workload(SCHEMA, (heavy,)), 64)
+    assert sig_heavy in state.counts
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+def test_infer_workload_deterministic_and_weighted():
+    cfg = _cfg(infer_top_k=4, infer_budget=16)
+    runs = []
+    for _ in range(2):
+        t = WorkloadTracker(SCHEMA, cfg)
+        for rnd in range(3):
+            t.record(qry.Workload(SCHEMA, (_range_query(0, 100, 50),) * 6))
+            t.record(qry.Workload(SCHEMA, (_range_query(1, 500, 50),) * 2))
+            t.tick()
+        runs.append(t.infer_workload())
+    assert runs[0].queries == runs[1].queries  # deterministic
+    wl = runs[0]
+    assert len(wl) == 16  # fixed budget, weights as multiplicity
+    (hot,) = query_signatures(
+        qry.Workload(SCHEMA, (_range_query(0, 100, 50),)), 64
+    )
+    hot_q = query_from_signature(hot, SCHEMA)
+    assert sum(1 for q in wl.queries if q == hot_q) > 8  # 3x the traffic
+    # a plain Workload: candidate cuts + Eq. 1 + build_layout all work
+    rng = np.random.default_rng(0)
+    records = np.stack([
+        rng.integers(0, 1000, 2000),
+        rng.integers(0, 1000, 2000),
+        rng.integers(0, 6, 2000),
+    ], axis=1).astype(np.int32)
+    build = build_layout(records, wl, min_block=100)
+    assert build.tree.n_leaves > 1
+    assert 0.0 < build.scanned_fraction < 1.0
+
+
+def test_infer_recency_beats_stale_frequency():
+    """A heavy-but-stale signature must decay below the live one."""
+    t = WorkloadTracker(SCHEMA, _cfg(n_gens=8, decay=0.5))
+    stale, live = _range_query(0, 100, 50), _range_query(1, 700, 50)
+    t.record(qry.Workload(SCHEMA, (stale,) * 4))
+    for _ in range(4):
+        t.tick()
+        t.record(qry.Workload(SCHEMA, (live,)))
+    top = t.top_signatures(2)
+    (sig_live,) = query_signatures(qry.Workload(SCHEMA, (live,)), 64)
+    assert top[0][0] == sig_live  # 4*0.5^4 = 0.25 < ~1.9
+    empty = WorkloadTracker(SCHEMA, _cfg()).infer_workload()
+    assert len(empty) == 0  # nothing served yet -> empty mix
+
+
+def test_tracker_state_serialization_roundtrips(tmp_path):
+    t = WorkloadTracker(SCHEMA, _cfg())
+    for seed in range(3):
+        t.record(_random_workload(seed))
+        t.tick()
+    t.record(_random_workload(99))
+    state = t.snapshot()
+    # npz (cross-host shipping)
+    p = str(tmp_path / "tracker_state.npz")
+    state.save(p)
+    assert TrackerState.load(p).equals(state)
+    # pickle (process pools)
+    assert pickle.loads(pickle.dumps(state)).equals(state)
+
+
+# ---------------------------------------------------------------------------
+# Serving-path hooks
+# ---------------------------------------------------------------------------
+def _service(records, workload, **kw):
+    kw.setdefault("min_block", 100)
+    return LayoutService.build(
+        records, workload, strategy="greedy", backend="numpy", **kw
+    )
+
+
+def _setup(seed=0, rows=4000):
+    rng = np.random.default_rng(seed)
+    records = np.stack([
+        rng.integers(0, 1000, rows),
+        rng.integers(0, 1000, rows),
+        rng.integers(0, 6, rows),
+    ], axis=1).astype(np.int32)
+
+    def workload(dim, wseed, n=8, width=60):
+        wrng = np.random.default_rng(wseed)
+        return qry.Workload(SCHEMA, tuple(
+            _range_query(dim, int(wrng.integers(0, 1000 - width)), width)
+            for _ in range(n)
+        ))
+
+    return records, workload(0, seed + 1), workload(1, seed + 2)
+
+
+def test_route_queries_and_route_query_feed_the_tracker():
+    records, work_a, _ = _setup()
+    build = build_layout(records, work_a, min_block=100)
+    eng = LayoutEngine(build.tree, backend="numpy")
+    tracker = WorkloadTracker(SCHEMA, _cfg())
+    # batched hook: results identical with and without tracking
+    tracked = eng.route_queries(work_a, track=tracker)
+    plain = eng.route_queries(work_a)
+    for x, y in zip(tracked, plain):
+        np.testing.assert_array_equal(x, y)
+    assert tracker.queries_seen == len(work_a)
+    # the recorded mix is exactly the served workload's signature set
+    assert set(s for s, _ in tracker.top_signatures(100)) == set(
+        query_signatures(work_a, tracker.config.n_buckets)
+    )
+    # 1-query path records too
+    before = tracker.queries_seen
+    bids = eng.route_query(work_a.queries[0], track=tracker)
+    np.testing.assert_array_equal(bids, plain[0])
+    assert tracker.queries_seen == before + 1
+
+
+def test_service_serve_records_and_ticks():
+    records, work_a, work_b = _setup(1)
+    svc = _service(records, work_a)
+    tracker = svc.workload_tracker(_cfg())
+    gen_before = tracker.snapshot().generation
+    lists = svc.serve(work_a, tracker=tracker)
+    assert len(lists) == len(work_a)
+    assert tracker.snapshot().generation == gen_before + 1  # round closed
+    svc.serve(work_b, tracker=tracker, tick=False)
+    assert tracker.snapshot().generation == gen_before + 1
+    # untracked serving still works
+    assert len(svc.serve(work_b)) == len(work_b)
+    # inference reflects both workloads, latest dominating after ticks
+    for _ in range(3):
+        svc.serve(work_b, tracker=tracker)
+    top = tracker.top_signatures(1)[0][0]
+    assert top in set(query_signatures(work_b, tracker.config.n_buckets))
+
+
+def test_auto_rebuilder_infers_the_shifted_mix_and_recovers():
+    """The full loop with NO declared workload anywhere: a stale tree, live
+    queries shift, the tracker infers the mix, drift fires, the rebuild
+    optimizes for the inferred (true) mix."""
+    records, work_a, work_b = _setup(7)
+    svc = _service(records[:2000], work_a)
+    gen0 = svc.generation
+    tracker = svc.workload_tracker(_cfg(n_buckets=256, n_gens=16))
+    with svc.auto_rebuilder(
+        "auto",
+        tracker=tracker,
+        config=DriftConfig(window=4, min_fill=2, abs_threshold=0.5,
+                           rel_degradation=None, hysteresis=2, cooldown=4),
+        reservoir_capacity=4000,
+        executor="sync",
+        rebuild_kw=dict(min_block=100),
+    ) as rebuilder:
+        assert rebuilder.tracker is tracker
+        # nothing served yet: ingest runs unobserved (no drift signal)
+        rep = svc.ingest([records[:500]], monitor=rebuilder)
+        assert rep.observation is None and not rebuilder.events
+
+        # phase A: the live mix matches the tree — healthy window
+        for s in range(500, 2000, 500):
+            svc.serve(work_a, tracker=tracker)
+            rep = svc.ingest([records[s:s + 500]], monitor=rebuilder)
+        assert rep.observation.scanned_fraction < 0.5
+        assert svc.generation == gen0 and not rebuilder.events
+
+        # phase B: users start asking orthogonal queries — nobody tells
+        # the monitor; it must notice from the serving path alone
+        for s in range(2000, 4000, 500):
+            svc.serve(work_b, tracker=tracker)
+            svc.ingest([records[s:s + 500]], monitor=rebuilder)
+        assert rebuilder.rebuilds_deployed == 1
+        assert svc.generation > gen0
+        (event,) = [e for e in rebuilder.events if e.deployed]
+        # the rebuild was scored and built against the inferred mix
+        assert event.report.build.provenance["n_queries"] == (
+            tracker.config.infer_budget
+        )
+        recovered = svc.skip_stats(
+            records, work_b, tighten=False
+        ).scanned_fraction
+        oracle = build_layout(records, work_b, min_block=100)
+        assert recovered <= max(
+            1.2 * oracle.scanned_fraction, oracle.scanned_fraction + 0.04
+        )
+
+
+def test_auto_rebuilder_validation_and_empty_workload_skip():
+    records, work_a, _ = _setup(2)
+    svc = _service(records[:1000], work_a)
+    with pytest.raises(ValueError):
+        svc.auto_rebuilder("magic")
+    # auto without an explicit tracker creates one from the service
+    reb = svc.auto_rebuilder(
+        "auto",
+        config=DriftConfig(window=1, min_fill=1, abs_threshold=0.1,
+                           rel_degradation=None, hysteresis=1, cooldown=0),
+        executor="sync",
+    )
+    assert reb.tracker is not None
+    assert len(reb.current_workload()) == 0
+    # a trigger with an empty inferred mix is skipped, not crashed
+    from repro.engine import WindowStat
+
+    reb.add_records(records[:100])
+    reb.observe(WindowStat(scanned_tuples=99, capacity=100, n_records=100))
+    assert reb.events[-1].skipped == "empty_workload"
+    reb.close()
