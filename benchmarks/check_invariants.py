@@ -57,8 +57,29 @@ SPEC: dict[str, dict[str, list[str]]] = {
             "backends.numpy.warm_retraces",
             "backends.jax.warm_retraces",
             "backends.pallas.warm_retraces",
+            "backends.numpy.ingest_warm_retraces",
+            "backends.jax.ingest_warm_retraces",
+            "backends.pallas.ingest_warm_retraces",
         ],
         "true": [],
+    },
+    "BENCH_fused_ingest_smoke.json": {
+        "equals": [
+            "n_records",
+            "n_blocks",
+            "two_pass.warm_retraces",
+            "fused.warm_retraces",
+            "record_touches.two_pass",
+            "record_touches.fused",
+            "bit_identical.numpy",
+            "bit_identical.jax",
+            "bit_identical.pallas_interpret",
+        ],
+        "true": [
+            "assertions.fused_matches_two_pass",
+            "assertions.zero_warm_retraces",
+            "assertions.bit_identical_all_backends",
+        ],
     },
     "BENCH_sharded_ingest_smoke.json": {
         "equals": [
@@ -72,6 +93,8 @@ SPEC: dict[str, dict[str, list[str]]] = {
             "shards.2.retraces",
             "shards.4.retraces",
             "shards.8.retraces",
+            "shards.1.process.bit_identical",
+            "shards.2.process.bit_identical",
         ],
         "true": [
             "assertions.bit_identical_all_k",

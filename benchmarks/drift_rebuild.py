@@ -79,8 +79,9 @@ def batches_of(records: np.ndarray, batch: int):
 
 
 def _warm(svc: LayoutService, sample: np.ndarray, *workloads) -> None:
-    """Compile the live generation's routing + query plans (swap cost)."""
+    """Compile the live generation's ingest + query plans (swap cost)."""
     svc.engine.route(sample)
+    svc.engine.warm_ingest([sample.shape[0]])  # ingest defaults fused
     for w in workloads:
         svc.engine.query_hits(w)
 

@@ -10,6 +10,12 @@ recorded in ``BENCH_sharded_ingest.json``:
   * with pre-warmed padding buckets the sharded runs perform ZERO retraces
     (every shard reuses the same compiled plans).
 
+Shards run the fused single-pass route+tighten path (the ingest default).
+Each k is measured on BOTH executors — the GIL-sharing thread pool and
+``executor="process"`` (spawn workers against a pickled tree replica,
+warmed worker-side) — with a ``process_vs_thread`` scaling column, so the
+thread-pool contention at high k is visible against the process path.
+
 Reported per k: pooled shard routing throughput (records / slowest-shard
 wall clock), end-to-end wall, and merge+publish cost.
 
@@ -26,7 +32,7 @@ import pathlib
 import numpy as np
 
 from benchmarks import common
-from repro.engine import LayoutEngine, pad_bucket, replicate_tree, sharded_ingest
+from repro.engine import LayoutEngine, replicate_tree, sharded_ingest
 from repro.engine.sharded import micro_batches, warm_sizes
 from repro.service import build_layout
 
@@ -38,11 +44,9 @@ SHARD_COUNTS = (1, 2, 4, 8)
 
 
 def _warm_buckets(engine: LayoutEngine, records, batch: int, n_shards: int):
-    """Compile every padding bucket the sharded run will hit."""
+    """Compile every fused-ingest bucket the sharded run will hit."""
     n = records.shape[0]
-    sizes = warm_sizes(n, n_shards, batch)
-    for bucket in sorted({pad_bucket(s, 64) for s in sizes}):
-        engine.route(records[: min(bucket, n)])
+    engine.warm_ingest(warm_sizes(n, n_shards, batch))
 
 
 def run(scale: float = 0.5, seed: int = 0, smoke: bool = False,
@@ -84,14 +88,7 @@ def run(scale: float = 0.5, seed: int = 0, smoke: bool = False,
         },
         "shards": {},
     }
-    identical = {}
-    zero_retrace = {}
-    base_pool_rate = None
-    for k in SHARD_COUNTS:
-        replica = replicate_tree(base)
-        eng = LayoutEngine(replica, backend=backend)
-        _warm_buckets(eng, records, batch, k)
-        rep = sharded_ingest(eng, records, k, batch=batch)
+    def _check_identical(rep, replica, k, label):
         ok = (
             np.array_equal(rep.block_sizes, rep1.block_sizes)
             and np.array_equal(replica.leaf_lo, oracle.leaf_lo)
@@ -99,16 +96,30 @@ def run(scale: float = 0.5, seed: int = 0, smoke: bool = False,
             and np.array_equal(replica.leaf_cat, oracle.leaf_cat)
             and np.array_equal(replica.leaf_adv, oracle.leaf_adv)
         )
-        identical[k] = bool(ok)
+        assert ok, f"k={k} ({label}): sharded ingest diverged"
+        return bool(ok)
+
+    identical = {}
+    zero_retrace = {}
+    base_pool_rate = None
+    # spawn workers pay a full interpreter+jax start each; keep the smoke
+    # matrix small (scaling is a bench-scale question anyway)
+    proc_ks = (1, 2) if smoke else SHARD_COUNTS
+    for k in SHARD_COUNTS:
+        replica = replicate_tree(base)
+        eng = LayoutEngine(replica, backend=backend)
+        _warm_buckets(eng, records, batch, k)
+        rep = sharded_ingest(eng, records, k, batch=batch)
+        ok = _check_identical(rep, replica, k, "thread")
+        identical[k] = ok
         zero_retrace[k] = not rep.traces
-        assert ok, f"k={k}: sharded ingest diverged from single-stream"
         assert not rep.traces, (
             f"k={k}: warmed sharded ingest retraced: {rep.traces}"
         )
         pool_rate = rep.shard_records_per_s
         if k == 1:
             base_pool_rate = pool_rate
-        results["shards"][str(k)] = {
+        row = {
             "records_per_s_pooled": pool_rate,
             "wall_s": rep.wall_s,
             "merge_s": rep.merge_s,
@@ -124,11 +135,36 @@ def run(scale: float = 0.5, seed: int = 0, smoke: bool = False,
             f"{pool_rate / base_pool_rate:5.2f}x vs 1-shard | "
             f"merge {rep.merge_s * 1e3:6.1f}ms | bit-identical {ok}"
         )
+        if k in proc_ks:
+            replica_p = replicate_tree(base)
+            rep_p = sharded_ingest(
+                LayoutEngine(replica_p, backend=backend), records, k,
+                batch=batch, executor="process",
+            )
+            ok_p = _check_identical(rep_p, replica_p, k, "process")
+            identical[k] = ok and ok_p
+            proc_rate = rep_p.shard_records_per_s
+            row["process"] = {
+                "records_per_s_pooled": proc_rate,
+                "wall_s": rep_p.wall_s,  # includes spawn + worker warmup
+                "slowest_shard_s": max(rep_p.shard_wall_s),
+                "bit_identical": ok_p,
+            }
+            row["process_vs_thread"] = (
+                proc_rate / pool_rate if pool_rate else 0.0
+            )
+            print(
+                f"[sharded_ingest] k={k}: process pooled "
+                f"{proc_rate:>12,.0f} rec/s | "
+                f"{row['process_vs_thread']:5.2f}x vs thread"
+            )
+        results["shards"][str(k)] = row
 
     results["assertions"] = {
         "bit_identical_all_k": all(identical.values()),
         "zero_retraces_all_k": all(zero_retrace.values()),
         "shard_counts": list(SHARD_COUNTS),
+        "process_shard_counts": list(proc_ks),
     }
     # smoke runs (CI) must not clobber the committed bench-scale numbers
     out = OUT.with_stem(OUT.stem + "_smoke") if smoke else OUT

@@ -126,10 +126,11 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
     )
 
     def _warm(sample: np.ndarray) -> None:
-        """Compile the live generation's plans: the routing bucket, the
-        serve-round query geometry, and the (fixed-budget) inferred-mix
-        geometry — everything the steady-state loop touches."""
+        """Compile the live generation's plans: the routing + fused-ingest
+        buckets, the serve-round query geometry, and the (fixed-budget)
+        inferred-mix geometry — everything the steady-state loop touches."""
         svc.engine.route(sample)
+        svc.engine.warm_ingest([sample.shape[0]])  # ingest defaults fused
         svc.engine.query_hits(serve_round(np.random.default_rng(0), work_a))
         inferred = tracker.infer_workload()
         if len(inferred):

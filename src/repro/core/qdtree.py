@@ -407,6 +407,28 @@ class FrozenQdTree:
         )
 
 
+@dataclasses.dataclass
+class TightenPartial:
+    """Pre-reduced per-leaf tightening aggregates for one batch.
+
+    The unit of exchange between the fused single-pass ingestion kernels
+    (``kernels/fused_ingest.py``, the engine backends) and the tightener:
+    the kernel reduces a routed batch to per-leaf partials on device, and
+    :meth:`IncrementalTightener.merge` folds them host-side with the same
+    elementwise monoid ops (min / max / sum / or) that ``update`` applies
+    per record.  ``lo``/``hi`` carry the tightener's int64 identity
+    elements on leaves the batch never touched, so merging is exact and
+    order-independent — bit-identical to the legacy two-pass route-then-
+    ``update`` path for any chunking.
+    """
+
+    counts: np.ndarray  # (L,) int64 records routed per leaf
+    lo: np.ndarray  # (L, D) int64 batch minima (int64 max where empty)
+    hi: np.ndarray  # (L, D) int64 batch maxima, exclusive (int64 min)
+    cat: np.ndarray  # (L, bits) bool categorical values present
+    adv: np.ndarray  # (L, A, 2) bool advanced-cut truth bits observed
+
+
 class IncrementalTightener:
     """Streaming min-max tightening of leaf descriptions (Sec 3.2, online).
 
@@ -416,7 +438,8 @@ class IncrementalTightener:
     writes the tightened descriptions into the tree.  Because min, max and
     any are associative, the result is bit-identical to one-shot
     ``FrozenQdTree.tighten`` over the concatenated batches regardless of how
-    the stream is chunked.
+    the stream is chunked.  :meth:`merge` folds a :class:`TightenPartial`
+    that a fused kernel already reduced per leaf — same monoid, same bits.
     """
 
     def __init__(self, tree: "FrozenQdTree"):
@@ -444,6 +467,21 @@ class IncrementalTightener:
             t = preds.eval_adv(records, tree.cuts.adv)
             np.logical_or.at(self.adv[:, :, 0], bids, t)
             np.logical_or.at(self.adv[:, :, 1], bids, ~t)
+
+    def merge(self, partial: TightenPartial) -> None:
+        """Fold a per-leaf pre-reduced partial (fused kernels, shards)."""
+        self.counts += partial.counts
+        np.minimum(self.lo, partial.lo, out=self.lo)
+        np.maximum(self.hi, partial.hi, out=self.hi)
+        self.cat |= partial.cat
+        self.adv |= partial.adv
+
+    def as_partial(self) -> TightenPartial:
+        """The accumulated state as an exchangeable partial (views)."""
+        return TightenPartial(
+            counts=self.counts, lo=self.lo, hi=self.hi, cat=self.cat,
+            adv=self.adv,
+        )
 
     def apply(self) -> None:
         """Write accumulated bounds into the tree's leaf descriptions."""

@@ -15,6 +15,11 @@ The lifecycle layer above (strategy-dispatched construction, versioned
 hot-swap rebuild) lives in :mod:`repro.service`.
 """
 
+from repro.engine.autotune import (  # noqa: F401
+    TileConfig,
+    autotune_fused,
+    geometry_key,
+)
 from repro.engine.backends import (  # noqa: F401
     Backend,
     available_backends,

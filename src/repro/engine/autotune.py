@@ -1,0 +1,207 @@
+"""Tile-shape autotuner for the fused Pallas ingestion kernel.
+
+The fused kernel (``kernels/fused_ingest.py``) is tiled over
+``tile_m`` record rows × ``tile_l`` leaf columns; the right shapes depend
+on the tree geometry (cut/leaf buckets set the operand matrices) and on
+whether the platform compiles Pallas at all (TPU) or runs it in interpret
+mode (CPU/GPU dev boxes).  This module owns that decision:
+
+* :func:`autotune_fused` sweeps a tile grid against a sample batch,
+  validates every candidate bit-identically against the numpy oracle
+  (``kernels/ref.fused_ingest_ref``), *probes compiled (non-interpret)
+  execution first* and falls back to interpret — recording which mode ran,
+  never silently substituting — then persists the fastest valid config.
+* :func:`lookup` / :func:`record` read/write the persisted store, keyed by
+  ``(backend, geometry-bucket)``; ``PallasBackend.fused_ingest`` consults
+  it when the caller does not pin tiles explicitly.
+
+The store is a plain JSON file (``results/autotune_tiles.json`` by
+default, override with ``REPRO_AUTOTUNE_STORE``) so tuned tiles survive
+across processes and land in benchmark artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.engine.plan import LANE, pad_bucket
+
+_ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_STORE = _ROOT / "results" / "autotune_tiles.json"
+
+# default sweep: record-tile × leaf-tile candidates (leaf tiles are LANE
+# multiples; the plan clamps tile_l to the leaf bucket)
+DEFAULT_TILE_GRID = (
+    (256, LANE),
+    (256, 2 * LANE),
+    (512, LANE),
+    (512, 2 * LANE),
+    (1024, LANE),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One persisted tuning decision for a (backend, geometry) bucket."""
+
+    tile_m: int
+    tile_l: int
+    interpret: bool  # True ⇒ compiled pallas unavailable, fallback recorded
+    records_per_s: float = 0.0
+    source: str = "autotune"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "TileConfig":
+        return TileConfig(
+            tile_m=int(d["tile_m"]),
+            tile_l=int(d["tile_l"]),
+            interpret=bool(d["interpret"]),
+            records_per_s=float(d.get("records_per_s", 0.0)),
+            source=str(d.get("source", "autotune")),
+        )
+
+
+def geometry_key(tree) -> str:
+    """Padding-bucket geometry signature: trees in the same cut/leaf
+    buckets share operand shapes, hence tile behavior."""
+    cut_bucket = pad_bucket(tree.cuts.n_cuts, LANE)
+    leaf_bucket = pad_bucket(tree.n_leaves, LANE)
+    return f"c{cut_bucket}-l{leaf_bucket}"
+
+
+def store_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_AUTOTUNE_STORE")
+    return pathlib.Path(env) if env else DEFAULT_STORE
+
+
+def _load_store() -> dict:
+    path = store_path()
+    if path.exists():
+        try:
+            return json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            return {}
+    return {}
+
+
+def lookup(backend: str, geom: str) -> Optional[TileConfig]:
+    entry = _load_store().get(f"{backend}:{geom}")
+    return TileConfig.from_dict(entry) if entry else None
+
+
+def record(backend: str, geom: str, cfg: TileConfig) -> None:
+    store = _load_store()
+    store[f"{backend}:{geom}"] = cfg.to_dict()
+    path = store_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(store, indent=2, sort_keys=True) + "\n")
+
+
+def _partials_identical(a, b) -> bool:
+    return (
+        bool(np.array_equal(a.counts, b.counts))
+        and bool(np.array_equal(a.lo, b.lo))
+        and bool(np.array_equal(a.hi, b.hi))
+        and bool(np.array_equal(a.cat, b.cat))
+        and bool(np.array_equal(a.adv, b.adv))
+    )
+
+
+def autotune_fused(
+    tree,
+    records: np.ndarray,
+    tile_grid=DEFAULT_TILE_GRID,
+    reps: int = 3,
+    persist: bool = True,
+) -> dict:
+    """Sweep fused-ingest tile shapes on the pallas backend; persist the win.
+
+    Every candidate is validated bit-identically against the numpy oracle
+    before it may win.  Compiled (non-interpret) execution is probed first
+    for each tile shape; when the platform cannot compile Pallas the
+    candidate reruns in interpret mode and the row records
+    ``mode="interpret"`` — the fallback is explicit, never silent.
+    """
+    from repro.engine.engine import engine_for
+    from repro.kernels.ref import fused_ingest_ref
+
+    engine = engine_for(tree)
+    oracle_bids, oracle_partial = fused_ingest_ref(tree, records)
+    geom = geometry_key(tree)
+    rows = []
+    for tile_m, tile_l in tile_grid:
+        row: dict = {"tile_m": int(tile_m), "tile_l": int(tile_l)}
+        result = None
+        for interpret in (False, True):
+            try:
+                bids, partial = engine.fused_step(
+                    records, backend="pallas", tile_m=tile_m,
+                    tile_l=tile_l, interpret=interpret,
+                )
+                result = (bids, partial, interpret)
+                break
+            except Exception as exc:  # lowering/compile unsupported here
+                row["compile_error"] = f"{type(exc).__name__}: {exc}"[:200]
+        if result is None:
+            row["mode"] = "failed"
+            row["valid"] = False
+            rows.append(row)
+            continue
+        bids, partial, interpret = result
+        row["mode"] = "interpret" if interpret else "compiled"
+        row["valid"] = bool(
+            np.array_equal(bids, oracle_bids)
+        ) and _partials_identical(partial, oracle_partial)
+        if row["valid"]:
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                engine.fused_step(
+                    records, backend="pallas", tile_m=tile_m,
+                    tile_l=tile_l, interpret=interpret,
+                )
+            dt = (time.perf_counter() - t0) / reps
+            row["records_per_s"] = float(records.shape[0] / dt)
+        rows.append(row)
+    valid = [r for r in rows if r.get("valid")]
+    chosen = None
+    if valid:
+        # compiled rows outrank interpret rows; speed breaks ties
+        best = max(
+            valid,
+            key=lambda r: (r["mode"] == "compiled", r["records_per_s"]),
+        )
+        chosen = TileConfig(
+            tile_m=best["tile_m"],
+            tile_l=best["tile_l"],
+            interpret=best["mode"] == "interpret",
+            records_per_s=best["records_per_s"],
+        )
+        if persist:
+            record("pallas", geom, chosen)
+    return {
+        "geometry": geom,
+        "rows": rows,
+        "chosen": chosen.to_dict() if chosen else None,
+        "compiled_available": any(r["mode"] == "compiled" for r in rows),
+    }
+
+
+__all__ = [
+    "DEFAULT_TILE_GRID",
+    "TileConfig",
+    "autotune_fused",
+    "geometry_key",
+    "lookup",
+    "record",
+    "store_path",
+]

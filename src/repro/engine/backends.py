@@ -84,6 +84,28 @@ class Backend:
     ) -> np.ndarray:
         raise NotImplementedError
 
+    def fused_ingest(
+        self,
+        tree: FrozenQdTree,
+        cache: PlanCache,
+        records: np.ndarray,
+        **opts,
+    ):
+        """One single-pass route + tighten step.
+
+        Returns ``(bids int32 (m,), TightenPartial)`` — the per-leaf
+        tightening aggregates of this batch, bit-identical to routing
+        followed by ``IncrementalTightener.update``.  The base
+        implementation is the legacy two-pass fallback, so every backend
+        has a fused entry point even before it grows a fused kernel.
+        """
+        from repro.core.qdtree import IncrementalTightener
+
+        bids = self.route(tree, cache, records, **opts)
+        t = IncrementalTightener(tree)
+        t.update(records, bids)
+        return bids, t.as_partial()
+
 
 # ---------------------------------------------------------------------------
 # numpy oracle
@@ -99,6 +121,13 @@ class NumpyBackend(Backend):
             tree.schema,
         )
         return qry.queries_intersect(conj, wt)
+
+    def fused_ingest(self, tree, cache, records, **opts):
+        # the numpy oracle IS the bit-identity reference for every fused
+        # backend (kernels/ref.py)
+        from repro.kernels.ref import fused_ingest_ref
+
+        return fused_ingest_ref(tree, records)
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +152,131 @@ def _route_jax_padded(records, ta, ca, depth):
 
     node = jax.lax.fori_loop(0, depth, body, node)
     return ta["leaf_bid"][node]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "l_dump", "cat_cols", "cat_gemm", "bits",
+                     "n_adv"),
+)
+def _ingest_jax_padded(records, valid, ta, ca, depth, l_dump, cat_cols,
+                       cat_gemm, bits, n_adv):
+    """Fused single-pass ingest: routing descent + segment reductions.
+
+    One jit replaces the two-pass hot path (jitted route, then the numpy
+    tightener's ``np.minimum.at``/``bincount`` scatters): the descent and
+    all per-leaf reductions trace into a single compiled program, so each
+    record is touched once.  Two structural optimizations carry the
+    speedup over the two-pass baseline on CPU:
+
+    * ``ca`` holds only the cuts the tree's internal nodes reference
+      (pruned + remapped by ``_ingest_plan``) — the route plan evaluates
+      the full candidate table, most of which no descent ever reads;
+    * the pruned table arrives *grouped by kind* (``[range | IN | adv]``
+      segments, each padded to its own bucket), so range cuts are pure
+      vector compares and the expensive per-cut bit gathers run only
+      over the IN segment instead of the whole table;
+    * counts / categorical bits / adv flags all come out of ONE one-hot
+      matmul (``leaf-onehotᵀ @ [1 | value-onehots | t | ~t]``) instead of
+      per-element scatters, which XLA:CPU executes serially.  The f32
+      accumulations are exact: 0/1 summands, totals < 2**24.
+
+    Padding rows are redirected to a dump row (``l_dump - 1``) that the
+    caller slices off; dictionary codes are int32 throughout, so the
+    aggregates convert to the tightener's int64 partials exactly.
+    ``cat_cols`` is ``((dim, bit_offset, cardinality), ...)``;
+    ``cat_gemm`` is False when the schema's bit layout is not contiguous
+    in dim order, falling back to per-dim scatters.
+    """
+    count_trace("ingest:jax")
+    from repro.core.routing import _in_lookup
+
+    m = records.shape[0]
+    if n_adv:
+        adv = ca["adv"]
+        va = records[:, adv[:, 0]]
+        vb = records[:, adv[:, 2]]
+        op = adv[:, 1][None, :]
+        t = jnp.select(
+            [op == 0, op == 1, op == 2, op == 3, op == 4, op == 5],
+            [va < vb, va <= vb, va > vb, va >= vb, va == vb, va != vb],
+        ).astype(bool)  # select's int default would break ~t
+
+    # kind-grouped predicate matrix: [range | IN | adv] segment columns
+    rng_m = records[:, ca["dim_r"]] < ca["cut_r"][None, :]
+    vals_i = records[:, ca["dim_i"]]
+    bitpos = jnp.clip(
+        vals_i + ca["off_i"][None, :], 0, ca["mask_i"].shape[1] - 1
+    )
+    inm = _in_lookup(ca["mask_i"], bitpos)
+    if n_adv:
+        advm = t[:, ca["advsel"]]
+    else:
+        advm = jnp.zeros((m, ca["advsel"].shape[0]), bool)
+    M = jnp.concatenate([rng_m, inm, advm], axis=1)
+
+    bitvec = None
+    if cat_gemm and cat_cols:
+        # per-record categorical one-hot at the schema's bit layout,
+        # feeding the stats matmul below
+        bitvec = jnp.concatenate(
+            [
+                (
+                    records[:, dd, None]
+                    == jnp.arange(card, dtype=records.dtype)[None, :]
+                ).astype(jnp.float32)
+                for dd, _off, card in cat_cols
+            ],
+            axis=1,
+        )
+    node = jnp.zeros(m, jnp.int32)
+
+    def body(_, node):
+        cid = ta["cut_id"][node]
+        pred = jnp.take_along_axis(
+            M, jnp.clip(cid, 0)[:, None].astype(jnp.int32), axis=1
+        )[:, 0]
+        nxt = jnp.where(pred, ta["left"][node], ta["right"][node])
+        return jnp.where(cid >= 0, nxt, node)
+
+    node = jax.lax.fori_loop(0, depth, body, node)
+    bids = ta["leaf_bid"][node]
+
+    d = records.shape[1]
+    i32 = jnp.iinfo(jnp.int32)
+    agg = jnp.where(valid, bids, l_dump - 1).astype(jnp.int32)
+    lo = (
+        jnp.full((l_dump, d), i32.max, jnp.int32).at[agg].min(records)
+    )
+    hi = (
+        jnp.full((l_dump, d), i32.min, jnp.int32).at[agg].max(records)
+    )
+
+    cols = [jnp.ones((m, 1), jnp.float32)]
+    if bitvec is not None:
+        cols.append(bitvec)
+    if n_adv:
+        cols.append(t.astype(jnp.float32))
+        cols.append((~t).astype(jnp.float32))
+    onehot = (
+        agg[:, None] == jnp.arange(l_dump, dtype=jnp.int32)[None, :]
+    ).astype(jnp.float32)
+    stats = onehot.T @ jnp.concatenate(cols, axis=1)
+    counts = stats[:, 0].astype(jnp.int32)
+    pos = 1
+    if bitvec is not None:
+        cat = stats[:, pos : pos + bits] > 0
+        pos += bits
+    else:
+        cat = jnp.zeros((l_dump, bits), bool)
+        for dd, off, _card in cat_cols:
+            cat = cat.at[agg, off + records[:, dd]].max(True)
+    if n_adv:
+        advt = stats[:, pos : pos + n_adv] > 0
+        advf = stats[:, pos + n_adv : pos + 2 * n_adv] > 0
+    else:
+        advt = advf = jnp.zeros((l_dump, 1), bool)
+    return bids, counts, lo, hi, cat, advt, advf
 
 
 @functools.partial(
@@ -220,6 +374,121 @@ class JaxBackend(Backend):
         out = plan.fn(jnp.asarray(padded))
         return np.asarray(out[:m]).astype(np.int32)
 
+    def _ingest_plan(self, tree, cache):
+        sig = planlib.tree_signature(tree)
+        node_bucket = pad_bucket(tree.n_nodes, 16)
+        leaf_bucket = pad_bucket(tree.n_leaves, 8)
+        depth_bucket = pad_bucket(tree.depth, 1)
+        # the ingest plan evaluates only the cuts the tree references —
+        # the candidate table is typically several times larger — and
+        # groups them by kind so range cuts stay pure compares and the
+        # per-cut bit gathers run only over the IN segment
+        from repro.core import predicates as preds
+
+        used = np.unique(tree.cut_id[tree.cut_id >= 0]).astype(np.int64)
+        kind_u = tree.cuts.kind[used]
+        seg_r = used[kind_u == preds.KIND_RANGE]
+        seg_i = used[kind_u == preds.KIND_IN]
+        seg_a = used[kind_u == preds.KIND_ADV]
+        nr_pad = pad_bucket(int(seg_r.size), 4)
+        ni_pad = pad_bucket(int(seg_i.size), 4)
+        na_pad = pad_bucket(int(seg_a.size), 4)
+        cut_bucket = nr_pad + ni_pad + na_pad
+        # dump row past the bucketed leaf axis absorbs padding rows
+        l_dump = leaf_bucket + 1
+        key = PlanKey(
+            sig, "jax", 0, node_bucket, leaf_bucket, cut_bucket,
+            ("ingest", depth_bucket, nr_pad, ni_pad, na_pad),
+        )
+
+        def build():
+            schema = tree.schema
+            ta_np = planlib.pack_tree_arrays(tree, node_bucket)
+            # remap node cut ids into the grouped table: segment base +
+            # position within segment
+            remap = np.full(max(tree.cuts.n_cuts, 1), -1, np.int64)
+            remap[seg_r] = np.arange(seg_r.size)
+            remap[seg_i] = nr_pad + np.arange(seg_i.size)
+            remap[seg_a] = nr_pad + ni_pad + np.arange(seg_a.size)
+            cid = ta_np["cut_id"]
+            ta_np["cut_id"] = np.where(
+                cid >= 0, remap[np.maximum(cid, 0)], -1
+            ).astype(cid.dtype)
+            ca_full = planlib.pack_cut_arrays(
+                tree, pad_bucket(tree.cuts.n_cuts, 16)
+            )
+
+            def _segpad(x, seg, n_pad, fill):
+                out = np.full((n_pad,) + x.shape[1:], fill, x.dtype)
+                out[: seg.size] = x[seg]
+                return out
+
+            off_full = ca_full["cat_offset"][ca_full["dim"]]
+            ca_np = {
+                "dim_r": _segpad(ca_full["dim"], seg_r, nr_pad, 0),
+                "cut_r": _segpad(ca_full["cutpoint"], seg_r, nr_pad, 0),
+                "dim_i": _segpad(ca_full["dim"], seg_i, ni_pad, 0),
+                "off_i": _segpad(off_full, seg_i, ni_pad, 0),
+                "mask_i": _segpad(ca_full["in_mask"], seg_i, ni_pad,
+                                  False),
+                "advsel": _segpad(ca_full["adv_id"], seg_a, na_pad, 0),
+                "adv": ca_full["adv"],
+            }
+            if ca_np["mask_i"].shape[1] == 0:  # no cat bits anywhere
+                ca_np["mask_i"] = np.zeros((ni_pad, 1), bool)
+            ta = {k: jnp.asarray(v) for k, v in ta_np.items()}
+            ca = {k: jnp.asarray(v) for k, v in ca_np.items()}
+            off = np.maximum(schema.cat_offsets, 0)
+            bits = max(int(schema.total_cat_bits), 1)
+            cat_cols = []
+            running = 0
+            cat_gemm = True
+            for dd in np.nonzero(schema.is_categorical)[0]:
+                card = int(schema.doms[dd])
+                if int(off[dd]) != running:
+                    cat_gemm = False  # unusual layout: scatter fallback
+                cat_cols.append((int(dd), int(off[dd]), card))
+                running += card
+            cat_gemm = cat_gemm and (
+                not cat_cols or running == int(schema.total_cat_bits)
+            )
+            fn = functools.partial(
+                _ingest_jax_padded, ta=ta, ca=ca, depth=depth_bucket,
+                l_dump=l_dump, cat_cols=tuple(cat_cols),
+                cat_gemm=cat_gemm, bits=bits, n_adv=tree.cuts.n_adv,
+            )
+            return CompiledPlan(
+                key=key, fn=fn, operands={"ta": ta, "ca": ca},
+                meta={"depth": depth_bucket, "l_dump": l_dump},
+            )
+
+        return cache.get(key, build)
+
+    def fused_ingest(self, tree, cache, records, **opts):
+        from repro.kernels.ref import partial_from_fused
+
+        plan = self._ingest_plan(tree, cache)
+        m = records.shape[0]
+        L = tree.n_leaves
+        m_bucket = pad_bucket(m, self.min_batch_bucket)
+        padded = np.zeros((m_bucket, records.shape[1]), np.int32)
+        padded[:m] = records
+        valid = np.zeros(m_bucket, bool)
+        valid[:m] = True
+        bids, counts, lo, hi, cat, advt, advf = plan.fn(
+            jnp.asarray(padded), jnp.asarray(valid)
+        )
+        partial = partial_from_fused(
+            tree,
+            np.asarray(counts)[:L],
+            np.asarray(lo)[:L],
+            np.asarray(hi)[:L],
+            np.asarray(cat)[:L],
+            np.asarray(advt)[:L],
+            np.asarray(advf)[:L],
+        )
+        return np.asarray(bids[:m]).astype(np.int32), partial
+
     def query_hits(self, tree, cache, wt, **opts):
         sig = planlib.tree_signature(tree)
         L = tree.n_leaves
@@ -306,6 +575,38 @@ def _route_pallas_padded(
     )
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_m", "tile_l", "n_cat_bits", "n_adv", "interpret"),
+)
+def _ingest_pallas_padded(
+    records_f32, valid, k, *, tile_m, tile_l, n_cat_bits, n_adv, interpret
+):
+    count_trace("ingest:pallas")
+    from repro.kernels import fused_ingest as fk
+
+    return fk.fused_ingest_pallas(
+        records_f32,
+        valid,
+        k["dim_onehot"],
+        k["cutpoint"],
+        k["in_mask_t"],
+        k["is_cat"],
+        k["cat_off"],
+        k["adv_cols"],
+        k["adv_sel"],
+        k["kind"],
+        k["pathpos"],
+        k["pathneg"],
+        k["leafid"],
+        tile_m=tile_m,
+        tile_l=tile_l,
+        n_cat_bits=n_cat_bits,
+        n_adv=n_adv,
+        interpret=interpret,
+    )
+
+
 @register_backend("pallas")
 class PallasBackend(Backend):
     min_batch_bucket = 256
@@ -358,6 +659,80 @@ class PallasBackend(Backend):
         padded[:m] = records
         bids = plan.fn(jnp.asarray(padded))
         return np.asarray(bids[:m]).astype(np.int32)
+
+    def _ingest_plan(self, tree, cache, tile_m, tile_l, interpret):
+        sig = planlib.tree_signature(tree)
+        cut_bucket = pad_bucket(tree.cuts.n_cuts, LANE)
+        leaf_bucket = pad_bucket(tree.n_leaves, LANE)
+        tile_l = min(tile_l, leaf_bucket)
+        if leaf_bucket % tile_l:  # non-divisor tile (autotuned oddball)
+            tile_l = LANE
+        key = PlanKey(
+            sig, "pallas", 0, 0, leaf_bucket, cut_bucket,
+            ("ingest", tile_m, tile_l, interpret),
+        )
+
+        def build():
+            packed = planlib.pack_route_constants(
+                tree, cut_bucket, leaf_bucket
+            )
+            meta = {
+                "n_adv": packed.pop("n_adv"),
+                "n_cat_bits": packed.pop("n_cat_bits"),
+                "tile_l": tile_l,
+            }
+            operands = {kk: jnp.asarray(v) for kk, v in packed.items()}
+            fn = functools.partial(
+                _ingest_pallas_padded,
+                k=operands,
+                tile_m=tile_m,
+                tile_l=tile_l,
+                n_cat_bits=meta["n_cat_bits"],
+                n_adv=meta["n_adv"],
+                interpret=interpret,
+            )
+            return CompiledPlan(key=key, fn=fn, operands=operands, meta=meta)
+
+        return cache.get(key, build)
+
+    def fused_ingest(
+        self, tree, cache, records, tile_m: int | None = None,
+        tile_l: int | None = None, interpret: bool | None = None, **opts,
+    ):
+        from repro.kernels.ref import partial_from_fused
+
+        if interpret is None:
+            interpret = interpret_default()
+        if tile_m is None or tile_l is None:
+            from repro.engine import autotune
+
+            cfg = autotune.lookup("pallas", autotune.geometry_key(tree))
+            tile_m = tile_m or (cfg.tile_m if cfg else 256)
+            tile_l = tile_l or (cfg.tile_l if cfg else LANE)
+        plan = self._ingest_plan(tree, cache, tile_m, tile_l, interpret)
+        m = records.shape[0]
+        L = tree.n_leaves
+        m_bucket = pad_bucket(m, max(self.min_batch_bucket, tile_m))
+        if m_bucket % tile_m:  # non-power-of-two tile_m
+            m_bucket = ((m_bucket + tile_m - 1) // tile_m) * tile_m
+        padded = np.zeros((m_bucket, records.shape[1]), np.float32)
+        padded[:m] = records
+        valid = np.zeros((m_bucket, 1), np.float32)
+        valid[:m] = 1.0
+        bids, counts, lo, hi, cat, advt, advf = plan.fn(
+            jnp.asarray(padded), jnp.asarray(valid)
+        )
+        partial = partial_from_fused(
+            tree,
+            np.asarray(counts)[0, :L],
+            np.asarray(lo)[:L],
+            np.asarray(hi)[:L],
+            np.asarray(cat)[:L],
+            np.asarray(advt)[:L],
+            np.asarray(advf)[:L],
+        )
+        bids_np = (np.asarray(bids)[:m, 0] - 1.0).astype(np.int32)
+        return bids_np, partial
 
     def query_hits(self, tree, cache, wt, interpret: bool | None = None,
                    **opts):

@@ -109,6 +109,7 @@ class IngestReport:
     plan_cache: dict  # hits/misses/size snapshot
     traces: dict  # trace-counter deltas during the run
     observation: Optional[WindowStat] = None  # set iff ``observe`` was given
+    fused: bool = False  # True when the single-pass route+tighten path ran
 
     @property
     def records_per_s(self) -> float:
@@ -290,6 +291,46 @@ class LayoutEngine:
         )
 
     # -- streaming ingestion -------------------------------------------------
+    def fused_step(
+        self, records: np.ndarray, backend: Optional[str] = None, **opts
+    ):
+        """One single-pass route + tighten step (no tree mutation).
+
+        Returns ``(bids int32 (m,), TightenPartial)`` — bit-identical to
+        :meth:`route` followed by ``IncrementalTightener.update`` over the
+        same records, but each record is touched once (the fused kernels;
+        see ``kernels/fused_ingest.py``).  The caller folds the partial
+        into a tightener (``merge``) or a shard reduction.
+        """
+        if records.shape[0] == 0:
+            return (
+                np.zeros(0, np.int32),
+                IncrementalTightener(self.tree).as_partial(),
+            )
+        kw = {**self._opts(), **opts}
+        return self._backend(backend).fused_ingest(
+            self.tree, self.plans, records, **kw
+        )
+
+    def warm_ingest(
+        self,
+        sizes: Iterable[int],
+        backend: Optional[str] = None,
+        **opts,
+    ) -> None:
+        """Compile fused-ingest plans for these batch sizes.
+
+        Routes zero-filled dummy batches through :meth:`fused_step` so the
+        per-bucket compilations land in the plan cache before real data
+        arrives; the tree itself is never mutated (the partials are
+        discarded).  Callers that also serve queries should warm those
+        separately via :meth:`query_hits`.
+        """
+        d = self.tree.leaf_lo.shape[1]
+        for s in sorted({int(s) for s in sizes if int(s) > 0}):
+            self.fused_step(np.zeros((s, d), np.int32), backend=backend,
+                            **opts)
+
     def observation_probe(
         self,
         workload: "qry.Workload | qry.WorkloadTensors | ObservationProbe",
@@ -317,6 +358,7 @@ class LayoutEngine:
         backend: Optional[str] = None,
         observe=None,  # Workload | WorkloadTensors | ObservationProbe | None
         on_observation=None,  # Callable[[WindowStat], None] | None
+        fused: bool = True,
     ) -> IngestReport:
         """Route arriving micro-batches and fold them into the layout.
 
@@ -334,6 +376,12 @@ class LayoutEngine:
         aggregate lands in ``IngestReport.observation``.  The probe is
         built once per call from the layout as of the start of the run, so
         the accounting itself is a pure numpy gather — no retraces.
+
+        ``fused=True`` (the default) takes the single-pass route+tighten
+        path — :meth:`fused_step` per batch, partials folded into the
+        tightener via ``merge`` — which is bit-identical to the legacy
+        two-pass loop but touches each record once.  ``fused=False``
+        restores the two-pass path (route, then host-side tighten).
         """
         traces0 = planlib.trace_counts()
         probe = (
@@ -346,15 +394,21 @@ class LayoutEngine:
         # the tightener already keeps per-leaf counts; only maintain a
         # separate accumulator when there is no tightener to read back
         sizes = None if tighten else np.zeros(self.tree.n_leaves, np.int64)
+        use_fused = fused and tightener is not None
         n_batches = n_records = 0
         t0 = time.perf_counter()
         for batch in batches:
             if batch.shape[0] == 0:
                 continue
-            bids = self.route(batch, backend=backend)
+            if use_fused:
+                bids, part = self.fused_step(batch, backend=backend)
+            else:
+                bids = self.route(batch, backend=backend)
             if buffers is not None:
                 buffers.append(batch, bids)
-            if tightener is not None:
+            if use_fused:
+                tightener.merge(part)
+            elif tightener is not None:
                 tightener.update(batch, bids)
             else:
                 sizes += np.bincount(bids, minlength=sizes.shape[0])
@@ -379,6 +433,7 @@ class LayoutEngine:
             plan_cache=self.plans.stats(),
             traces=delta,
             observation=observed,
+            fused=use_fused,
         )
 
     # -- introspection -------------------------------------------------------

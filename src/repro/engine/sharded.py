@@ -17,12 +17,17 @@ regardless of association or order).  Three pieces:
 * :class:`MergeCoordinator` folds ShardStates associatively and publishes
   the merged tightening into the tree — bit-identical to single-stream
   ``LayoutEngine.ingest`` over the same records.
-* :func:`sharded_ingest` wires both onto a thread-based
-  ``concurrent.futures`` executor (ingestors close over the live engine,
-  whose compiled plans don't pickle).  ShardState itself is pure numpy —
-  it pickles and round-trips through npz (``save``/``load``) — so process
-  pools and real multi-host runs build ShardIngestors worker-side against
-  a tree replica and ship only the states back to one MergeCoordinator.
+* :func:`sharded_ingest` wires both onto a ``concurrent.futures``
+  executor.  Thread pools (the default) share the live engine's compiled
+  plans; ``executor="process"`` takes the real multi-host shape instead:
+  each spawn-context worker rebuilds a ShardIngestor against a pickled
+  :func:`replicate_tree` replica, warms its own plans, and ships only the
+  (pure-numpy, pickle/npz-serializable) ShardState back to the parent's
+  MergeCoordinator.
+
+Shards route + tighten through the fused single-pass path
+(``LayoutEngine.fused_step``) by default — bit-identical to the legacy
+two-pass loop, each record touched once.
 
 ``LayoutService.ingest_sharded`` is the lifecycle facade over this module.
 """
@@ -181,6 +186,7 @@ class ShardIngestor:
         backend: Optional[str] = None,
         collect_blocks: bool = False,
         probe: Optional[ObservationProbe] = None,
+        fused: bool = True,
     ):
         self.engine = (
             layout
@@ -194,6 +200,7 @@ class ShardIngestor:
         # shard scores against the SAME probe arrays, so the summed
         # window-stat partials are bit-identical to single-stream ingest
         self.probe = probe
+        self.fused = fused
 
     def run(self, batches: Iterable[np.ndarray]) -> ShardState:
         """Route every micro-batch; return this shard's aggregates."""
@@ -212,8 +219,14 @@ class ShardIngestor:
         for batch in batches:
             if batch.shape[0] == 0:
                 continue
-            bids = self.engine.route(batch, backend=self.backend)
-            tightener.update(batch, bids)
+            if self.fused:
+                bids, part = self.engine.fused_step(
+                    batch, backend=self.backend
+                )
+                tightener.merge(part)
+            else:
+                bids = self.engine.route(batch, backend=self.backend)
+                tightener.update(batch, bids)
             if spill is not None:
                 spill.append(batch, bids)
             if self.probe is not None:
@@ -356,12 +369,49 @@ def _run_shard(ingestor: ShardIngestor, batches) -> ShardState:
     return ingestor.run(batches)
 
 
+def _process_shard_worker(
+    tree: FrozenQdTree,
+    part: np.ndarray,
+    shard_id: int,
+    batch: int,
+    backend: Optional[str],
+    collect_blocks: bool,
+    probe: Optional[ObservationProbe],
+    fused: bool,
+) -> ShardState:
+    """Process-pool target: rebuild a ShardIngestor against the replica.
+
+    Runs in a spawn-context worker with no shared state: the tree replica,
+    the shard's record slice, and the (pure-numpy) probe all arrive by
+    pickle; only the ShardState ships back.  Plans are warmed before the
+    timed run so a worker's first-compile cost never lands in ``wall_s``
+    (the parent's trace counters are untouched either way — compiles
+    happen in the worker process).
+    """
+    engine = engine_for(tree)
+    if fused:
+        engine.warm_ingest(
+            warm_sizes(part.shape[0], 1, batch), backend=backend
+        )
+    else:
+        for s in warm_sizes(part.shape[0], 1, batch):
+            engine.route(
+                np.zeros((s, tree.leaf_lo.shape[1]), np.int32),
+                backend=backend,
+            )
+    ingestor = ShardIngestor(
+        engine, shard_id=shard_id, backend=backend,
+        collect_blocks=collect_blocks, probe=probe, fused=fused,
+    )
+    return ingestor.run(micro_batches(part, batch))
+
+
 def sharded_ingest(
     layout: FrozenQdTree | LayoutEngine,
     records: np.ndarray,
     n_shards: int,
     batch: int = 2048,
-    executor: Optional[Executor] = None,
+    executor: "Executor | str | None" = None,
     collect_blocks: bool = False,
     buffers=None,  # data.blocks.BlockBuffers | None
     tighten: bool = True,
@@ -369,6 +419,7 @@ def sharded_ingest(
     lock=None,  # context manager guarding the publish step
     observe=None,  # Workload | WorkloadTensors | ObservationProbe | None
     publish_check=None,  # Callable[[], bool], evaluated under ``lock``
+    fused: bool = True,
 ) -> ShardedIngestReport:
     """Shard ``records`` across parallel ingestors and merge associatively.
 
@@ -392,23 +443,26 @@ def sharded_ingest(
     is skipped and the report carries ``stale_generation=True`` (see
     ``LayoutService.ingest_sharded``).
 
-    ``executor`` must be thread-based: ingestors close over the live
-    engine (compiled plans don't pickle).  For process pools or real
-    multi-host runs, build the ShardIngestors worker-side against a tree
-    replica and ship the (picklable, npz-serializable) ShardStates back
-    to one MergeCoordinator instead.
+    ``executor`` selects the pool: ``None`` / ``"thread"`` (or any
+    thread-based Executor instance) shares the live engine's compiled
+    plans across shards; ``"process"`` (or a ProcessPoolExecutor
+    instance) takes the multi-host shape — spawn-context workers rebuild
+    ShardIngestors against a pickled :func:`replicate_tree` replica and
+    ship ShardStates back, so nothing unpicklable ever crosses the
+    process boundary and shard routing escapes the GIL.
     """
     engine = (
         layout if isinstance(layout, LayoutEngine) else engine_for(layout)
     )
-    if isinstance(executor, ProcessPoolExecutor):
-        raise TypeError(
-            "sharded_ingest needs a thread-based executor: ingestors close "
-            "over the live engine, whose compiled plans don't pickle. For "
-            "process pools / multi-host, run ShardIngestors worker-side "
-            "against a tree replica and ship ShardStates (pickle/npz) back "
-            "to one MergeCoordinator."
-        )
+    if isinstance(executor, str):
+        if executor not in ("thread", "process"):
+            raise ValueError(
+                f"executor must be 'thread', 'process', an Executor, or "
+                f"None — got {executor!r}"
+            )
+    use_process = executor == "process" or isinstance(
+        executor, ProcessPoolExecutor
+    )
     if buffers is not None:
         collect_blocks = True
     traces0 = planlib.trace_counts()
@@ -417,27 +471,53 @@ def sharded_ingest(
         if observe is not None
         else None
     )
-    ingestors = [
-        ShardIngestor(
-            engine, shard_id=i, backend=backend,
-            collect_blocks=collect_blocks, probe=probe,
-        )
-        for i in range(n_shards)
-    ]
-    shard_batches = [
-        micro_batches(part, batch)
-        for part in shard_slices(records, n_shards)
-    ]
+    shard_parts = shard_slices(records, n_shards)
     t0 = time.perf_counter()
-    if executor is None:
-        with ThreadPoolExecutor(max_workers=n_shards) as pool:
-            states = list(
-                pool.map(_run_shard, ingestors, shard_batches)
-            )
+    if use_process:
+        replica = replicate_tree(engine.tree)
+        args = [
+            (replica, shard_parts[i], i, batch, backend, collect_blocks,
+             probe, fused)
+            for i in range(n_shards)
+        ]
+        if isinstance(executor, ProcessPoolExecutor):
+            states = [
+                f.result()
+                for f in [
+                    executor.submit(_process_shard_worker, *a) for a in args
+                ]
+            ]
+        else:
+            import multiprocessing as mp
+
+            ctx = mp.get_context("spawn")
+            with ProcessPoolExecutor(
+                max_workers=n_shards, mp_context=ctx
+            ) as pool:
+                states = [
+                    f.result()
+                    for f in [
+                        pool.submit(_process_shard_worker, *a) for a in args
+                    ]
+                ]
     else:
-        states = list(
-            executor.map(_run_shard, ingestors, shard_batches)
-        )
+        ingestors = [
+            ShardIngestor(
+                engine, shard_id=i, backend=backend,
+                collect_blocks=collect_blocks, probe=probe, fused=fused,
+            )
+            for i in range(n_shards)
+        ]
+        shard_batches = [micro_batches(part, batch) for part in shard_parts]
+        if executor is None or executor == "thread":
+            with ThreadPoolExecutor(max_workers=n_shards) as pool:
+                states = list(
+                    pool.map(_run_shard, ingestors, shard_batches)
+                )
+        else:
+            states = list(
+                executor.map(_run_shard, ingestors, shard_batches)
+            )
     t_merge = time.perf_counter()
     coordinator = MergeCoordinator(engine.tree)
     for state in states:

@@ -3,11 +3,19 @@
 These are the correctness references the kernel tests sweep against; the
 end-to-end semantic oracle is ``FrozenQdTree.route`` / ``query.
 conjuncts_intersect`` (numpy), which ``ops.py`` wires up identically.
+
+``fused_ingest_ref`` is the *numpy* bit-identity oracle for the fused
+single-pass ingestion path: route via the numpy descent, tighten via the
+legacy ``IncrementalTightener`` arithmetic, packaged as the same
+``(bids, TightenPartial)`` pair every fused backend returns.
+``fused_ingest_ops_ref`` mirrors the Pallas kernel at the padded-operand
+level (same inputs and f32 outputs, no tiling).
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def eval_cuts_ref(
@@ -66,6 +74,123 @@ def locate_leaf_ref(m_mat, pathpos, pathneg, leafid):
     viol = (1.0 - m_mat) @ pathpos + m_mat @ pathneg
     hit = (viol < 0.5).astype(jnp.float32)
     return hit @ leafid[0] - 1.0
+
+
+def fused_ingest_ref(tree, records):
+    """Numpy bit-identity oracle: one batch routed + reduced per leaf.
+
+    Exactly the legacy two-pass arithmetic (``FrozenQdTree.route`` then
+    ``IncrementalTightener.update``), returned in the fused-path shape:
+    ``(bids int32, TightenPartial)``.  Every fused backend must reproduce
+    this bit-for-bit.
+    """
+    from repro.core.qdtree import IncrementalTightener
+
+    bids = tree.route(records)
+    t = IncrementalTightener(tree)
+    t.update(records, bids)
+    return bids, t.as_partial()
+
+
+def fused_ingest_ops_ref(
+    records_f32,  # (M, D)
+    valid,  # (M, 1)
+    dim_onehot, cutpoint, in_mask_t, is_cat_row, cat_offset_row,
+    adv_cols, adv_sel, kind_row,
+    pathpos,  # (C, L)
+    pathneg,  # (C, L)
+    leafid,  # (1, L)
+    n_adv: int,
+    big: float = float(2**25),
+):
+    """Operand-level oracle for ``fused_ingest_pallas`` (same outputs)."""
+    m_mat = eval_cuts_ref(
+        records_f32, dim_onehot, cutpoint, in_mask_t, is_cat_row,
+        cat_offset_row, adv_cols, adv_sel, kind_row, n_adv,
+    )
+    viol = (1.0 - m_mat) @ pathpos + m_mat @ pathneg
+    hit = (viol < 0.5).astype(jnp.float32)  # (M, L)
+    bids = hit @ leafid.T  # (M, 1), bid + 1
+    hitv = hit * valid
+    counts = hitv.sum(axis=0, keepdims=True)  # (1, L)
+
+    d = records_f32.shape[1]
+    lo = jnp.stack(
+        [
+            jnp.where(hitv > 0.5, records_f32[:, dd][:, None], big).min(0)
+            for dd in range(d)
+        ],
+        axis=1,
+    )
+    hi = jnp.stack(
+        [
+            jnp.where(hitv > 0.5, records_f32[:, dd][:, None], -big).max(0)
+            for dd in range(d)
+        ],
+        axis=1,
+    )
+
+    bits = in_mask_t.shape[0]
+    bitpos = records_f32 + cat_offset_row
+    onehots = (
+        bitpos[:, :, None] == jnp.arange(bits, dtype=jnp.float32)
+    ).astype(jnp.float32)
+    go = (onehots * is_cat_row[0][None, :, None]).sum(axis=1)  # (M, B)
+    cat = ((hitv.T @ go) > 0.5).astype(jnp.float32)  # (L, B)
+
+    a3 = adv_sel.shape[0]
+    adv_res = jnp.zeros((records_f32.shape[0], a3), jnp.float32)
+    if n_adv > 0:
+        didx = jnp.arange(d, dtype=jnp.float32)
+        for a in range(n_adv):
+            ca, op, cb = adv_cols[a, 0], adv_cols[a, 1], adv_cols[a, 2]
+            va = (records_f32 * (didx == ca)).sum(axis=1)
+            vb = (records_f32 * (didx == cb)).sum(axis=1)
+            t = jnp.select(
+                [op == 0, op == 1, op == 2, op == 3, op == 4],
+                [va < vb, va <= vb, va > vb, va >= vb, va == vb],
+                va != vb,
+            )
+            adv_res = adv_res.at[:, a].set(t.astype(jnp.float32))
+    advtp = hitv.T @ adv_res  # (L, A3)
+    advt = (advtp > 0.5).astype(jnp.float32)
+    advf = ((counts[0][:, None] - advtp) > 0.5).astype(jnp.float32)
+    return bids, counts, lo, hi, cat, advt, advf
+
+
+def partial_from_fused(tree, counts, lo, hi, cat, advt, advf):
+    """Convert fused-kernel f32 aggregates (already sliced to the tree's
+    ``n_leaves``) into the numpy tightener's exchange format.
+
+    Dictionary codes are < 2**24, so the f32 → int64 narrowing is exact;
+    empty leaves get the tightener's int64 identity elements and ``hi``
+    becomes exclusive (max + 1) — bit-identical to
+    ``IncrementalTightener.update`` over the same records.
+    """
+    from repro.core.qdtree import TightenPartial
+
+    i64 = np.iinfo(np.int64)
+    counts = np.asarray(counts).astype(np.int64)
+    ne = counts > 0
+    lo64 = np.where(
+        ne[:, None], np.asarray(lo).astype(np.int64), i64.max
+    )
+    hi64 = np.where(
+        ne[:, None], np.asarray(hi).astype(np.int64) + 1, i64.min
+    )
+    pcat = np.zeros_like(tree.leaf_cat)
+    nb = min(pcat.shape[1], cat.shape[1])
+    pcat[:, :nb] = np.asarray(cat[:, :nb]) > 0.5
+    pcat &= ne[:, None]
+    padv = np.zeros_like(tree.leaf_adv)
+    na = tree.cuts.n_adv
+    if na:
+        padv[:, :, 0] = np.asarray(advt[:, :na]) > 0.5
+        padv[:, :, 1] = np.asarray(advf[:, :na]) > 0.5
+        padv &= ne[:, None, None]
+    return TightenPartial(
+        counts=counts, lo=lo64, hi=hi64, cat=pcat, adv=padv
+    )
 
 
 def query_intersect_ref(

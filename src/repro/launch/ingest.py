@@ -140,6 +140,14 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=1,
                     help="ingest with N parallel shard ingestors "
                          "(associative merge; bit-identical to --shards 1)")
+    ap.add_argument("--executor", default="thread",
+                    choices=("thread", "process"),
+                    help="shard executor (--shards > 1): 'thread' shares "
+                         "the live engine's compiled plans, 'process' "
+                         "spawns workers against a pickled tree replica")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="use the legacy two-pass route+tighten path "
+                         "instead of the fused single-pass kernels")
     ap.add_argument("--rebuild", action="store_true",
                     help="after ingest, rebuild on the full corpus and "
                          "hot-swap if the Eq.1 skip rate improves")
@@ -232,7 +240,8 @@ def main() -> None:
 
     engine = service.engine
     buffers = BlockBuffers.for_tree(frozen)
-    # warmup: compile the routing plan for every padding bucket the jittered
+    fused = not args.no_fused
+    # warmup: compile the ingest plan for every padding bucket the jittered
     # stream will produce (incl. the tail remainder), so the ingest loop
     # itself runs fully warm — zero retraces
     if args.shards > 1:
@@ -241,9 +250,12 @@ def main() -> None:
         sizes = sorted(warm_sizes(records.shape[0], args.shards, args.batch))
     else:
         sizes = batch_sizes(records.shape[0], args.batch, args.seed)
-    buckets = {pad_bucket(s, 64) for s in sizes}
-    for m in sorted(min(b, records.shape[0]) for b in buckets):
-        engine.route(records[:m])
+    if fused:
+        engine.warm_ingest(sizes)
+    else:
+        buckets = {pad_bucket(s, 64) for s in sizes}
+        for m in sorted(min(b, records.shape[0]) for b in buckets):
+            engine.route(records[:m])
     qrng = np.random.default_rng(args.seed + 7)
     if tracker is not None:
         # round 0 of live traffic: the tracker must know something before
@@ -265,6 +277,7 @@ def main() -> None:
         if monitor is None and tracker is None:
             shard_rounds = [service.ingest_sharded(
                 records, args.shards, batch=args.batch, buffers=buffers,
+                executor=args.executor, fused=fused,
             )]
             report = shard_rounds[0]
         else:
@@ -293,6 +306,7 @@ def main() -> None:
                 shard_rounds.append(service.ingest_sharded(
                     records[s : s + chunk], args.shards, batch=args.batch,
                     buffers=buffers, monitor=monitor,
+                    executor=args.executor, fused=fused,
                 ))
             report = merge_round_reports(shard_rounds)
         last = shard_rounds[-1]
@@ -332,13 +346,14 @@ def main() -> None:
             )
             round_reports.append(service.ingest(
                 micro_batches(records[off : off + n_round], round_sizes),
-                buffers=buffers, monitor=monitor,
+                buffers=buffers, monitor=monitor, fused=fused,
             ))
             off += n_round
         report = merge_round_reports(round_reports)
     else:
         report = service.ingest(
-            micro_batches(records, sizes), buffers=buffers, monitor=monitor
+            micro_batches(records, sizes), buffers=buffers, monitor=monitor,
+            fused=fused,
         )
     print(
         f"[ingest] {report.n_records} records / {report.n_batches} "
@@ -444,6 +459,8 @@ def main() -> None:
         "backend": report.backend,
         "strategy": args.strategy,
         "n_shards": args.shards,
+        "fused": fused,
+        "executor": args.executor if args.shards > 1 else None,
         "plan_cache": report.plan_cache,
         "ingest_traces": report.traces,
         "scanned_fraction": stats.scanned_fraction,

@@ -247,16 +247,16 @@ class LayoutService:
         records: np.ndarray,
         n_shards: int,
         batch: int = 2048,
-        executor: Optional[Executor] = None,
+        executor: "Executor | str | None" = None,
         monitor=None,
         **kw,
     ):
         """Shard-parallel ingestion into the live tree (engine.sharded).
 
         Splits ``records`` contiguously across ``n_shards`` ShardIngestors
-        (a private thread pool by default, or any thread-based
-        ``concurrent.futures`` executor — see ``sharded_ingest`` for the
-        process-pool/multi-host recipe), folds their ShardStates
+        (a private thread pool by default; ``executor="process"`` runs
+        spawn-context workers against a pickled tree replica instead —
+        see ``sharded_ingest``), folds their ShardStates
         associatively, and publishes the merged
         tightening under the service lock — the description-version bump
         evicts stale per-signature query plans exactly as a single-stream

@@ -1,0 +1,216 @@
+"""Fused single-pass ingestion: bit-identity properties and lifecycle.
+
+The fused kernels (``kernels/fused_ingest.py``, the fused jax jit, and the
+numpy reference) must be indistinguishable from the legacy two-pass
+route-then-tighten path — same block ids, same tightened descriptions,
+same per-block counts — across every backend, batch size / padding
+bucket, random tree geometry, and shard count. These tests pin that
+contract property-style, plus the autotune store round trip.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers without hypothesis
+    from tests._hypothesis_shim import given, settings, st
+
+from repro.core.qdtree import IncrementalTightener
+from repro.engine import LayoutEngine, replicate_tree, sharded_ingest
+from repro.engine import autotune
+from repro.engine.sharded import micro_batches
+from repro.kernels.ref import fused_ingest_ref
+from tests.test_qdtree import random_tree, small_setup
+
+
+def _frozen(seed=0):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    tree = random_tree(schema, cuts, records, rng)
+    return schema, records, cuts, tree.freeze()
+
+
+def _partials_identical(a, b) -> bool:
+    return (
+        np.array_equal(a.counts, b.counts)
+        and np.array_equal(a.lo, b.lo)
+        and np.array_equal(a.hi, b.hi)
+        and np.array_equal(a.cat, b.cat)
+        and np.array_equal(a.adv, b.adv)
+    )
+
+
+def _trees_identical(a, b) -> bool:
+    return (
+        np.array_equal(a.leaf_lo, b.leaf_lo)
+        and np.array_equal(a.leaf_hi, b.leaf_hi)
+        and np.array_equal(a.leaf_cat, b.leaf_cat)
+        and np.array_equal(a.leaf_adv, b.leaf_adv)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backend bit-identity vs the numpy oracle
+# ---------------------------------------------------------------------------
+@settings(max_examples=24, deadline=None)
+@given(st.data())
+def test_fused_step_matches_oracle(data):
+    """Every backend's single fused pass reproduces the numpy reference
+    bit for bit — bids, counts, lo/hi, categorical and adv masks — across
+    random trees (leaf counts) and batch sizes (padding buckets)."""
+    backend, opts = data.draw(
+        st.sampled_from(
+            [("numpy", {}), ("jax", {}), ("pallas", {"interpret": True})]
+        ),
+        label="backend",
+    )
+    seed = data.draw(st.integers(min_value=0, max_value=5), label="seed")
+    _, records, _, base = _frozen(seed)
+    # sizes straddle the pad buckets: tiny, LANE-1/LANE/LANE+1, full
+    m = data.draw(
+        st.sampled_from([1, 7, 63, 64, 65, 127, 128, 129, 500]),
+        label="batch",
+    )
+    batch = records[: min(m, records.shape[0])]
+    want_bids, want_partial = fused_ingest_ref(base, batch)
+    eng = LayoutEngine(replicate_tree(base), backend=backend)
+    bids, partial = eng.fused_step(batch, **opts)
+    np.testing.assert_array_equal(bids, want_bids)
+    assert _partials_identical(partial, want_partial)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_fused_ingest_bit_identical_to_two_pass(data):
+    """``ingest(fused=True)`` and the legacy two-pass path land the exact
+    same tightened tree and per-block counts for any micro-batch size."""
+    seed = data.draw(st.integers(min_value=0, max_value=5), label="seed")
+    batch = data.draw(st.sampled_from([17, 64, 200, 500]), label="batch")
+    backend = data.draw(st.sampled_from(["numpy", "jax"]), label="backend")
+    _, records, _, base = _frozen(seed)
+
+    legacy = replicate_tree(base)
+    rep2 = LayoutEngine(legacy, backend=backend).ingest(
+        micro_batches(records, batch), fused=False
+    )
+    fused = replicate_tree(base)
+    repf = LayoutEngine(fused, backend=backend).ingest(
+        micro_batches(records, batch), fused=True
+    )
+    assert not rep2.fused and repf.fused
+    np.testing.assert_array_equal(repf.block_sizes, rep2.block_sizes)
+    assert _trees_identical(fused, legacy)
+
+
+def test_fused_partial_merge_across_batches_matches_one_shot():
+    """TightenPartial merge is the associative fold the sharded/streaming
+    paths rely on: folding per-batch fused partials equals one fused pass
+    over the whole stream."""
+    _, records, _, base = _frozen(2)
+    _, want = fused_ingest_ref(base, records)
+    eng = LayoutEngine(replicate_tree(base), backend="numpy")
+    acc = IncrementalTightener(eng.tree)
+    for b in micro_batches(records, 77):
+        _, part = eng.fused_step(b)
+        acc.merge(part)
+    assert _partials_identical(acc.as_partial(), want)
+
+
+def test_fused_step_empty_batch_is_identity():
+    _, records, _, base = _frozen(3)
+    eng = LayoutEngine(replicate_tree(base), backend="numpy")
+    bids, part = eng.fused_step(records[:0])
+    assert bids.shape == (0,)
+    assert int(part.counts.sum()) == 0
+    # identity partial: merging it moves nothing
+    acc = IncrementalTightener(eng.tree)
+    acc.merge(part)
+    assert int(acc.as_partial().counts.sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharded fused ingestion
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_sharded_fused_bit_identical_to_single_stream(k):
+    _, records, _, base = _frozen(5)
+    oracle = replicate_tree(base)
+    rep1 = LayoutEngine(oracle, backend="numpy").ingest(
+        micro_batches(records, 64), fused=True
+    )
+    replica = replicate_tree(base)
+    repk = sharded_ingest(
+        LayoutEngine(replica, backend="numpy"), records, k, batch=64,
+        fused=True,
+    )
+    np.testing.assert_array_equal(repk.block_sizes, rep1.block_sizes)
+    assert _trees_identical(replica, oracle)
+
+
+def test_sharded_process_executor_bit_identical():
+    """``executor="process"`` spawn workers (pickled tree replica, rebuilt
+    engine, worker-side warm) reproduce the thread path bit for bit."""
+    _, records, _, base = _frozen(7)
+    oracle = replicate_tree(base)
+    LayoutEngine(oracle, backend="numpy").ingest(
+        micro_batches(records, 97), fused=True
+    )
+    replica = replicate_tree(base)
+    rep = sharded_ingest(
+        LayoutEngine(replica, backend="numpy"), records, 2, batch=97,
+        executor="process",
+    )
+    assert rep.published
+    assert _trees_identical(replica, oracle)
+
+
+def test_sharded_rejects_unknown_executor_string():
+    _, records, _, base = _frozen(1)
+    with pytest.raises(ValueError, match="executor"):
+        sharded_ingest(
+            LayoutEngine(replicate_tree(base), backend="numpy"),
+            records, 2, executor="fork-bomb",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Autotune store
+# ---------------------------------------------------------------------------
+def test_autotune_store_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv(
+        "REPRO_AUTOTUNE_STORE", str(tmp_path / "tiles.json")
+    )
+    _, _, _, base = _frozen(0)
+    geom = autotune.geometry_key(base)
+    assert autotune.lookup("pallas", geom) is None
+    cfg = autotune.TileConfig(
+        tile_m=512, tile_l=128, interpret=True, records_per_s=123.0
+    )
+    autotune.record("pallas", geom, cfg)
+    got = autotune.lookup("pallas", geom)
+    assert got is not None
+    assert (got.tile_m, got.tile_l, got.interpret) == (512, 128, True)
+    # unknown geometry stays a miss
+    assert autotune.lookup("pallas", "c9999-l9999") is None
+
+
+def test_autotune_fused_validates_and_persists(tmp_path, monkeypatch):
+    """A tiny sweep: every surviving candidate is bit-validated against
+    the oracle, the fallback mode is recorded (never silent), and the
+    chosen tiles land in the store for the backend to pick up."""
+    monkeypatch.setenv(
+        "REPRO_AUTOTUNE_STORE", str(tmp_path / "tiles.json")
+    )
+    _, records, _, base = _frozen(4)
+    tune = autotune.autotune_fused(
+        base, records[:256], tile_grid=((256, 128),), reps=1
+    )
+    assert tune["rows"] and all(
+        r["mode"] in ("compiled", "interpret", "failed")
+        for r in tune["rows"]
+    )
+    chosen = tune["chosen"]
+    assert chosen is not None
+    got = autotune.lookup("pallas", tune["geometry"])
+    assert got is not None and got.tile_m == chosen["tile_m"]

@@ -340,16 +340,16 @@ def test_service_ingest_sharded_detects_stale_generation():
 
 
 def test_sharded_ingest_zero_retraces_when_warm():
-    """Every shard reuses the same compiled plans: with the padding
-    buckets pre-warmed, a k-shard run performs zero retraces."""
+    """Every shard reuses the same compiled plans: with the fused-ingest
+    padding buckets pre-warmed, a k-shard run performs zero retraces."""
     from repro.engine import plan as planlib
+    from repro.engine.sharded import warm_sizes
 
     _, records, _, base = _frozen(17)
     replica = replicate_tree(base)
     eng = LayoutEngine(replica, backend="jax")
     n, k, batch = records.shape[0], 4, 64
-    for size in {batch, (n // k) % batch, (n // k + 1) % batch} - {0}:
-        eng.route(records[:size])
+    eng.warm_ingest(warm_sizes(n, k, batch))
     traces0 = sum(planlib.trace_counts().values())
     rep = sharded_ingest(eng, records, k, batch=batch)
     assert sum(planlib.trace_counts().values()) == traces0
