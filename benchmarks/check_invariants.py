@@ -138,6 +138,38 @@ SPEC: dict[str, dict[str, list[str]]] = {
             "assertions.top_signatures_are_live",
         ],
     },
+    "BENCH_serving_smoke.json": {
+        # phase 1 runs sync serve_batch rounds on the calling thread, so
+        # every cache/dispatch counter is exactly reproducible; phase 2
+        # (threaded closed loop) contributes only its staleness and
+        # bit-identity outcomes — hit counts there depend on scheduling
+        "equals": [
+            "n_records",
+            "n_blocks",
+            "deterministic.queries_served",
+            "deterministic.queries_cached",
+            "deterministic.queries_routed",
+            "deterministic.dispatches",
+            "deterministic.engine_dispatches",
+            "deterministic.hits",
+            "deterministic.misses",
+            "deterministic.insertions",
+            "deterministic.invalidated",
+            "deterministic.stale_puts",
+            "deterministic.stale_responses",
+            "deterministic.swap_generation",
+            "deterministic.bit_identical",
+            "closed_loop.stale_responses",
+            "closed_loop.bit_identical",
+        ],
+        "true": [
+            "assertions.bit_identical_hits",
+            "assertions.bit_identical_closed_loop",
+            "assertions.zero_stale_responses",
+            "assertions.zero_retraces_outside_swap",
+            "assertions.hit_speedup_ok",
+        ],
+    },
 }
 
 _MISSING = object()

@@ -10,7 +10,7 @@ cache path.
 
 import argparse
 
-from repro.launch import serve
+from repro.launch import serve_lm as serve
 
 
 def main():

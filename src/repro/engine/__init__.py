@@ -46,7 +46,9 @@ from repro.engine.sharded import (  # noqa: F401
     ShardedIngestReport,
     ShardIngestor,
     ShardState,
+    process_pool,
     replicate_tree,
     shard_slices,
     sharded_ingest,
+    shutdown_process_pool,
 )

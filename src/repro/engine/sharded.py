@@ -34,8 +34,11 @@ two-pass loop, each record touched once.
 
 from __future__ import annotations
 
+import atexit
 import contextlib
 import dataclasses
+import multiprocessing
+import threading
 import time
 from concurrent.futures import Executor, ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Iterable, Optional
@@ -369,6 +372,59 @@ def _run_shard(ingestor: ShardIngestor, batches) -> ShardState:
     return ingestor.run(batches)
 
 
+# -- resident spawn pool -----------------------------------------------------
+# ``executor="process"`` used to build (and tear down) a fresh spawn-context
+# ProcessPoolExecutor per run, so every run re-paid interpreter start + jax
+# import in each worker — the fixed cost that ate the k-shard win in
+# BENCH_sharded_ingest.json's process columns.  Workers are stateless
+# (each task ships its own tree replica and returns a pure-numpy
+# ShardState), so one module-level pool can serve every run; it is built
+# lazily at the first ``process_pool`` call, grows (never shrinks) to the
+# largest shard count requested, and lives until ``shutdown_process_pool``
+# or interpreter exit.
+_pool_lock = threading.Lock()
+_pool: Optional[ProcessPoolExecutor] = None
+_pool_workers = 0
+
+
+def process_pool(min_workers: int = 1) -> ProcessPoolExecutor:
+    """The resident spawn pool backing ``executor="process"`` runs.
+
+    Returns a ProcessPoolExecutor with at least ``min_workers`` workers,
+    creating or growing it as needed (growth replaces the pool — spawn
+    pools cannot resize — after draining the old one).  A pool whose
+    workers died (BrokenProcessPool) is rebuilt transparently.
+    """
+    global _pool, _pool_workers
+    if min_workers < 1:
+        raise ValueError("min_workers must be >= 1")
+    with _pool_lock:
+        broken = _pool is not None and getattr(_pool, "_broken", False)
+        if _pool is None or broken or _pool_workers < min_workers:
+            old = _pool
+            workers = max(min_workers, _pool_workers)
+            _pool = ProcessPoolExecutor(
+                max_workers=workers,
+                mp_context=multiprocessing.get_context("spawn"),
+            )
+            _pool_workers = workers
+            if old is not None:
+                old.shutdown(wait=not broken)
+        return _pool
+
+
+def shutdown_process_pool(wait: bool = True) -> None:
+    """Tear down the resident spawn pool (next use rebuilds it lazily)."""
+    global _pool, _pool_workers
+    with _pool_lock:
+        pool, _pool, _pool_workers = _pool, None, 0
+    if pool is not None:
+        pool.shutdown(wait=wait)
+
+
+atexit.register(shutdown_process_pool, wait=False)
+
+
 def _process_shard_worker(
     tree: FrozenQdTree,
     part: np.ndarray,
@@ -449,7 +505,10 @@ def sharded_ingest(
     instance) takes the multi-host shape — spawn-context workers rebuild
     ShardIngestors against a pickled :func:`replicate_tree` replica and
     ship ShardStates back, so nothing unpicklable ever crosses the
-    process boundary and shard routing escapes the GIL.
+    process boundary and shard routing escapes the GIL.  The string form
+    uses the RESIDENT module pool (:func:`process_pool`, grown to
+    ``n_shards``): spawn + jax-import cost is paid once per worker for
+    the whole interpreter lifetime, not once per run.
     """
     engine = (
         layout if isinstance(layout, LayoutEngine) else engine_for(layout)
@@ -488,18 +547,15 @@ def sharded_ingest(
                 ]
             ]
         else:
-            import multiprocessing as mp
-
-            ctx = mp.get_context("spawn")
-            with ProcessPoolExecutor(
-                max_workers=n_shards, mp_context=ctx
-            ) as pool:
-                states = [
-                    f.result()
-                    for f in [
-                        pool.submit(_process_shard_worker, *a) for a in args
-                    ]
+            # the resident spawn pool: first use pays spawn + jax import
+            # once per worker, later runs reuse the warm interpreters
+            pool = process_pool(n_shards)
+            states = [
+                f.result()
+                for f in [
+                    pool.submit(_process_shard_worker, *a) for a in args
                 ]
+            ]
     else:
         ingestors = [
             ShardIngestor(

@@ -95,6 +95,7 @@ class LayoutService:
         self._lock = threading.Lock()
         self._gen = 0
         self._versions: dict[int, LayoutVersion] = {}
+        self._swap_listeners: list[Callable[[LayoutVersion], None]] = []
         self._live = self._new_version(layout)
 
     # -- construction --------------------------------------------------------
@@ -142,6 +143,29 @@ class LayoutService:
     @property
     def tree(self) -> FrozenQdTree:
         return self._live.tree
+
+    def live_version(self) -> LayoutVersion:
+        """The live :class:`LayoutVersion` — ONE read of the swap pointer.
+
+        Callers that must route and report against a single consistent
+        generation (the serving tier's dispatch loop) grab this once and
+        use ``v.engine``/``v.tree``/``v.generation`` together; reading the
+        ``engine``/``generation`` properties separately can straddle a
+        concurrent hot swap.
+        """
+        return self._live
+
+    def live_epoch(self) -> tuple[int, int]:
+        """The serving epoch: ``(generation, leaf-description version)``.
+
+        Hot swaps and rollbacks change the generation; in-place
+        tightening during ingest bumps the live tree's description
+        version (changing ``query_hits`` results without a swap).  Either
+        movement retires every result computed under the old epoch — this
+        is the result-cache invalidation key (`repro.serve.cache`).
+        """
+        live = self._live
+        return (live.generation, planlib.desc_version(live.tree))
 
     def versions(self) -> tuple[int, ...]:
         """Retained generations, oldest first."""
@@ -312,12 +336,38 @@ class LayoutService:
         return AutoRebuilder(self, workload, config=config, **kw)
 
     # -- lifecycle: swap / rollback / release --------------------------------
+    def subscribe(self, listener: Callable[[LayoutVersion], None]) -> None:
+        """Register a callback fired after every live-version change.
+
+        The callback receives the NEW live :class:`LayoutVersion` and runs
+        on the swapping thread, outside the service lock (it may call back
+        into the service).  The serving tier uses this to invalidate its
+        result cache and warm the incoming generation's plans promptly,
+        rather than discovering the swap at the next dispatch.
+        """
+        with self._lock:
+            self._swap_listeners.append(listener)
+
+    def unsubscribe(self, listener: Callable[[LayoutVersion], None]) -> None:
+        with self._lock:
+            try:
+                self._swap_listeners.remove(listener)
+            except ValueError:
+                pass
+
+    def _notify_swap(self, v: LayoutVersion) -> None:
+        with self._lock:
+            listeners = tuple(self._swap_listeners)
+        for fn in listeners:
+            fn(v)
+
     def swap(self, build: LayoutBuild) -> int:
         """Deploy ``build`` as a new generation (atomic); returns it."""
         with self._lock:
             v = self._new_version(build)
             self._live = v  # single reference assignment — atomic swap
-            return v.generation
+        self._notify_swap(v)
+        return v.generation
 
     def _swap_if_live_is(
         self, expected: LayoutVersion, build: LayoutBuild
@@ -330,7 +380,8 @@ class LayoutService:
                 return None
             v = self._new_version(build)
             self._live = v
-            return v.generation
+        self._notify_swap(v)
+        return v.generation
 
     def rollback(self, generation: Optional[int] = None) -> int:
         """Make a retained generation live again (default: the previous)."""
@@ -349,7 +400,8 @@ class LayoutService:
                     f"retained: {tuple(sorted(self._versions))}"
                 )
             self._live = v
-            return generation
+        self._notify_swap(v)
+        return generation
 
     def release(self, generation: int) -> int:
         """Drop a retained generation and evict its compiled plans.

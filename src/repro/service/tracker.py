@@ -122,6 +122,42 @@ def _conjunct_signature(
     return tuple(sorted(atoms))
 
 
+# Per-query signature memo.  Serving paths repeat the same Query OBJECTS
+# (dashboards, Zipf-skewed mixes reuse workload templates), and
+# canonicalization is pure given (query, n_buckets, adv_filter) — so the
+# atom fold runs once per distinct key.  This is what keeps the
+# result-cache HIT path (exact signatures) and the tracker's per-dispatch
+# recording (sketch signatures) off the serving critical path.  Keys use
+# ``id(query)`` rather than the query's (recomputed-per-call) dataclass
+# hash; each entry holds a strong reference to its query so the id cannot
+# be recycled while the entry lives.  Dict get/set are GIL-atomic; a
+# racing recompute writes the same value.  On overflow the memo is simply
+# cleared: one-shot query floods cannot grow it without bound, and the
+# hot set re-memoizes in one dispatch.  Fresh-but-equal query objects
+# miss the memo and just recompute — correctness never depends on a hit.
+_SIG_MEMO: dict[tuple, tuple] = {}
+_SIG_MEMO_MAX = 65_536
+
+# Same id-keyed pattern for the cut table's advanced-atom filter: one
+# frozenset per CutTable object (frozensets cache their hash, so reusing
+# the object also makes the _SIG_MEMO key lookups cheap).
+_ADV_FILTER_MEMO: dict[int, tuple] = {}
+
+
+def adv_filter_for(cuts) -> Optional[frozenset]:
+    """The ``(col_a, op, col_b)`` filter for a cut table, memoized."""
+    if cuts is None:
+        return None
+    memoized = _ADV_FILTER_MEMO.get(id(cuts))
+    if memoized is not None:
+        return memoized[1]
+    f = frozenset((a.col_a, a.op, a.col_b) for a in cuts.adv)
+    if len(_ADV_FILTER_MEMO) >= 1024:
+        _ADV_FILTER_MEMO.clear()
+    _ADV_FILTER_MEMO[id(cuts)] = (cuts, f)
+    return f
+
+
 def query_signatures(
     workload: qry.Workload,
     n_buckets: int,
@@ -143,6 +179,11 @@ def query_signatures(
     doms = schema.doms
     sigs: list[tuple] = []
     for q in workload.queries:
+        memo_key = (id(q), id(schema), n_buckets, adv_filter)
+        memoized = _SIG_MEMO.get(memo_key)
+        if memoized is not None:
+            sigs.append(memoized[2])
+            continue
         conj_sigs = []
         for conj in q.conjuncts:
             lo = [0] * schema.ndims
@@ -182,7 +223,12 @@ def query_signatures(
                 _conjunct_signature(lo, hi, cat_values, adv, schema,
                                     n_buckets)
             )
-        sigs.append(tuple(sorted(conj_sigs)))
+        sig = tuple(sorted(conj_sigs))
+        if len(_SIG_MEMO) >= _SIG_MEMO_MAX:
+            _SIG_MEMO.clear()
+        # the value pins (query, schema) so the id-based key stays valid
+        _SIG_MEMO[memo_key] = (q, schema, sig)
+        sigs.append(sig)
     return sigs
 
 
@@ -644,13 +690,9 @@ class WorkloadTracker:
             # with a cut table in hand, restrict advanced atoms to it —
             # the tensorized overload cannot see non-cut adv atoms, and a
             # query must map to one key regardless of serving overload
-            adv_filter = (
-                frozenset((a.col_a, a.op, a.col_b) for a in cuts.adv)
-                if cuts is not None
-                else None
-            )
             sigs = query_signatures(
-                workload, self.config.n_buckets, adv_filter=adv_filter
+                workload, self.config.n_buckets,
+                adv_filter=adv_filter_for(cuts),
             )
         with self._lock:
             self.state.add(sigs, weight=weight)

@@ -165,6 +165,40 @@ def test_sharded_process_executor_bit_identical():
     assert _trees_identical(replica, oracle)
 
 
+def test_resident_process_pool_reused_across_runs():
+    """Consecutive ``executor="process"`` runs share ONE resident spawn
+    pool (workers pay interpreter start + jax import once, not per run);
+    the pool never shrinks, and ``shutdown_process_pool`` retires it so
+    the next run rebuilds lazily."""
+    from repro.engine import process_pool, shutdown_process_pool
+
+    _, records, _, base = _frozen(7)
+    oracle = replicate_tree(base)
+    LayoutEngine(oracle, backend="numpy").ingest(
+        micro_batches(records, 97), fused=True
+    )
+    pool = process_pool(2)
+    assert process_pool(1) is pool  # grow-only: smaller asks don't churn
+    for _ in range(2):
+        replica = replicate_tree(base)
+        rep = sharded_ingest(
+            LayoutEngine(replica, backend="numpy"), records, 2, batch=97,
+            executor="process",
+        )
+        assert rep.published
+        assert _trees_identical(replica, oracle)
+        assert process_pool(1) is pool  # both runs rode the same pool
+    shutdown_process_pool()
+    fresh = process_pool(1)
+    try:
+        assert fresh is not pool
+    finally:
+        shutdown_process_pool()
+
+    with pytest.raises(ValueError):
+        process_pool(0)
+
+
 def test_sharded_rejects_unknown_executor_string():
     _, records, _, base = _frozen(1)
     with pytest.raises(ValueError, match="executor"):

@@ -125,7 +125,7 @@ def _encdec_logits(params, batch, cfg):
 
 
 def _splice(cfg, caches, prefill_caches, plen):
-    from repro.launch.serve import _splice as splice
+    from repro.launch.serve_lm import _splice as splice
 
     return splice(cfg, caches, prefill_caches, plen)
 
