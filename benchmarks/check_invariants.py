@@ -138,6 +138,38 @@ SPEC: dict[str, dict[str, list[str]]] = {
             "assertions.top_signatures_are_live",
         ],
     },
+    "BENCH_replication_smoke.json": {
+        "equals": [
+            "n_records",
+            "templates",
+            "k1.scanned",
+            "k2.scanned",
+            "k4.scanned",
+            "k1.n_blocks",
+            "k2.n_blocks",
+            "k4.n_blocks",
+            "k1.warm_retraces",
+            "k2.warm_retraces",
+            "k4.warm_retraces",
+            "improvement_4x",
+            "serving.queries_served",
+            "serving.queries_cached",
+            "serving.hits",
+            "serving.misses",
+            "serving.stale_puts",
+            "serving.stale_responses",
+            "serving.bit_identical",
+        ],
+        "true": [
+            "assertions.monotone_scanned",
+            "assertions.improvement_ge_gate",
+            "assertions.k1_bit_identical",
+            "assertions.zero_warm_retraces",
+            "assertions.serving_second_round_cached",
+            "assertions.serving_bit_identical",
+            "assertions.zero_stale_responses",
+        ],
+    },
     "BENCH_serving_smoke.json": {
         # phase 1 runs sync serve_batch rounds on the calling thread, so
         # every cache/dispatch counter is exactly reproducible; phase 2

@@ -45,7 +45,13 @@ from repro.engine import (
 )
 from repro.engine import plan as planlib
 from repro.engine.sharded import micro_batches
-from repro.service import DriftConfig, LayoutService, build_layout
+from repro.service import (
+    DriftConfig,
+    IngestOptions,
+    LayoutService,
+    RebuildPolicy,
+    build_layout,
+)
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / (
     "BENCH_drift_rebuild.json"
@@ -110,9 +116,9 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
         f"bootstrap tree: {svc.tree.n_leaves} blocks"
     )
 
-    rebuilder = svc.auto_rebuilder(
-        work_a,
-        config=DriftConfig(
+    rebuilder = svc.auto_rebuilder(RebuildPolicy(
+        workload=work_a,
+        drift=DriftConfig(
             window=8, min_fill=4, abs_threshold=0.5, rel_degradation=1.0,
             hysteresis=2, cooldown=8,
         ),
@@ -121,7 +127,7 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
         reservoir_capacity=phase_b.shape[0],
         executor="sync",  # deterministic: rebuild fires inside observe()
         rebuild_kw=dict(min_block=min_block, seed=seed),
-    )
+    ))
 
     # warm every plan the steady-state stream needs: the batch padding
     # bucket + the query plans of both standing workloads
@@ -135,7 +141,7 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
     for i, b in enumerate(batches_of(records, batch)):
         if i * batch == shift_at:
             rebuilder.set_workload(work_b)  # the queries drift, silently
-        rep = svc.ingest([b], monitor=rebuilder)
+        rep = svc.ingest([b], options=IngestOptions(monitor=rebuilder))
         rates.append(rep.observation.scanned_fraction)
         delta = planlib.trace_delta(t0, trace_counts())
         if svc.generation != gen_seen:

@@ -1,0 +1,243 @@
+"""Replica sets: k-replica layouts vs one compromise tree (Eq. 1).
+
+The paper's critique of fixed blocking schemes — they "are unable to
+exploit additional available storage" — applies to a single qd-tree too:
+one tree is one compromise layout for the whole mix.  This benchmark
+spends 1x / 2x / 4x storage on 1 / 2 / 4 replicas clustered from a
+four-cluster query mix (range templates over four *independent* columns,
+so a single tree must split its cut budget four ways) and measures the
+Eq. 1 scanned fraction under cheapest-replica routing:
+
+  * scanned fraction is MONOTONE NON-INCREASING in the storage budget
+    (every query takes its cheapest replica),
+  * the 4x budget beats the single tree by >= the configured gate,
+  * k=1 routing is BIT-IDENTICAL to the plain single-tree engine path
+    (the replica layer degrades to exactly today's behavior),
+  * replica routing performs ZERO warm retraces (all replicas share the
+    service plan cache; per-replica plan keys carry the tree signature),
+  * serving a k-replica set through QueryServer re-serves a repeated
+    mix fully from cache with zero stale responses.
+
+    PYTHONPATH=src python -m benchmarks.replication            # bench
+    PYTHONPATH=src python -m benchmarks.replication --smoke    # CI tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import query as qry
+from repro.data import datagen
+from repro.engine import trace_counts
+from repro.engine.plan import trace_delta
+from repro.serve import QueryServer, ServeConfig
+from repro.service import LayoutService
+
+from benchmarks.drift_rebuild import range_workload
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_replication.json"
+)
+
+# ship(0), quantity(3), extendedprice(5), orderdate(6): independent
+# columns, so the four clusters genuinely compete for one tree's cuts
+CLUSTER_DIMS = (0, 3, 5, 6)
+BUDGETS = (1, 2, 4)
+LAM = 0.25
+# per-cluster conjunct budget: with 64 tracked signatures the default 64
+# keeps only one copy of each kept signature, flattening the lam-blend
+# into a 50/50 dilution; 256 lets the deficit-fill loop restore the
+# weight-proportional multiplicities the blend calls for
+MIX_BUDGET = 256
+
+
+def clustered_mix(schema, per_cluster: int, frac: float, seed: int):
+    """Four range-template clusters over independent columns,
+    interleaved so no prefix of the mix is single-cluster."""
+    parts = [
+        range_workload(schema, d, per_cluster, frac, seed + 11 * i)
+        for i, d in enumerate(CLUSTER_DIMS)
+    ]
+    queries = tuple(
+        q for group in zip(*(p.queries for p in parts)) for q in group
+    )
+    return qry.Workload(schema, queries)
+
+
+def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
+    if smoke:
+        rows, min_block, per_cluster, frac = 8_000, 150, 8, 0.05
+        gate = 1.3
+    else:
+        rows, min_block, per_cluster, frac = 48_000, 600, 16, 0.04
+        gate = 1.3
+
+    schema, records = datagen.make_tpch_like(rows, seed=seed)
+    mix = clustered_mix(schema, per_cluster, frac, seed + 1)
+    print(
+        f"[replication] {rows} rows, {len(mix)} queries in "
+        f"{len(CLUSTER_DIMS)} clusters (dims {CLUSTER_DIMS}), "
+        f"backend={backend}"
+    )
+
+    per_k: dict[str, dict] = {}
+    scanned: dict[int, float] = {}
+    k1_bit_identical = None
+    for k in BUDGETS:
+        svc = LayoutService.build(
+            records, mix, strategy="greedy", backend=backend,
+            min_block=min_block, seed=seed,
+        )
+        if k == 1:
+            # the replica layer must degrade to exactly the single-tree
+            # path: same block IDs as a direct engine dispatch
+            direct = svc.engine.route_queries(
+                mix.tensorize(svc.tree.cuts)
+            )
+            routes = svc.route_queries_cheapest(mix)
+            k1_bit_identical = all(
+                r.replica_id == 0 and np.array_equal(r.bids, d)
+                for r, d in zip(routes, direct)
+            )
+        else:
+            rep = svc.rebuild_replicas(
+                records, workload=mix, k=k, lam=LAM, swap="always",
+                budget=MIX_BUDGET, min_block=min_block, seed=seed,
+            )
+            assert rep.swapped
+        rset = svc.live_replica_set()
+        scanned[k] = rset.scanned_fraction(mix, n_records=rows)
+        # replica routing must be fully warm after one dispatch per
+        # replica: all replicas share the service plan cache
+        rset.route_queries(mix)
+        t0 = trace_counts()
+        rset.route_queries(mix)
+        retraces = trace_delta(t0, trace_counts()) or {}
+        per_k[f"k{k}"] = {
+            "replicas": rset.k,
+            "scanned": scanned[k],
+            "skip_rate": 1.0 - scanned[k],
+            "n_blocks": [v.tree.n_leaves for v in rset.versions],
+            "generations": list(rset.generations()),
+            "warm_retraces": retraces,
+        }
+        print(
+            f"[replication] k={k}: {rset.k} replica(s), scanned "
+            f"{scanned[k]:.4f} (skip {1 - scanned[k]:.4f}), blocks "
+            f"{per_k[f'k{k}']['n_blocks']}, warm retraces {retraces}"
+        )
+
+    improvement_4x = (
+        scanned[1] / scanned[4] if scanned[4] > 0 else float("inf")
+    )
+    monotone = (
+        scanned[2] <= scanned[1] + 1e-12
+        and scanned[4] <= scanned[2] + 1e-12
+    )
+    zero_retraces = all(
+        not per_k[f"k{k}"]["warm_retraces"] for k in BUDGETS
+    )
+    print(
+        f"[replication] scanned 1x/2x/4x = {scanned[1]:.4f} / "
+        f"{scanned[2]:.4f} / {scanned[4]:.4f} -> 4x improvement "
+        f"{improvement_4x:.2f}x (gate {gate}x), monotone {monotone}"
+    )
+
+    # ---- serving a replica set: cached re-serve, zero staleness ----
+    svc = LayoutService.build(
+        records, mix, strategy="greedy", backend=backend,
+        min_block=min_block, seed=seed,
+    )
+    svc.rebuild_replicas(
+        records, workload=mix, k=4, lam=LAM, swap="always",
+        budget=MIX_BUDGET, min_block=min_block, seed=seed,
+    )
+    server = QueryServer(
+        svc, ServeConfig(max_batch=32, cache_capacity=4096)
+    )
+    server.warm(mix)
+    queries = list(mix.queries)
+    server.serve_batch(queries)
+    r2 = server.serve_batch(queries)
+    second_all_cached = all(r.cached for r in r2)
+    det = server.stats()
+    expected = svc.live_replica_set().route_queries(mix)
+    serve_bit_identical = all(
+        res.replica_id == exp.replica_id
+        and np.array_equal(res.bids, exp.bids)
+        for res, exp in zip(r2, expected)
+    )
+    server.stop()
+    serving = {
+        "queries_served": det["counters"]["queries_served"],
+        "queries_cached": det["counters"]["queries_cached"],
+        "hits": det["cache"]["hits"],
+        "misses": det["cache"]["misses"],
+        "stale_puts": det["cache"]["stale_puts"],
+        "stale_responses": det["counters"]["stale_responses"],
+        "second_round_all_cached": second_all_cached,
+        "bit_identical": serve_bit_identical,
+    }
+    print(
+        f"[replication] serving k=4: {serving['queries_served']} served, "
+        f"{serving['hits']} hits / {serving['misses']} misses, second "
+        f"round cached {second_all_cached}, bit-identical "
+        f"{serve_bit_identical}, stale {serving['stale_responses']}"
+    )
+
+    results_doc = {
+        "n_records": rows,
+        "templates": len(mix),
+        "cluster_dims": list(CLUSTER_DIMS),
+        "lam": LAM,
+        "budgets": list(BUDGETS),
+        "backend": backend,
+        "smoke": smoke,
+        **{k: v for k, v in per_k.items()},
+        "improvement_4x": improvement_4x,
+        "gate": gate,
+        "serving": serving,
+        "assertions": {
+            "monotone_scanned": monotone,
+            "improvement_ge_gate": improvement_4x >= gate,
+            "k1_bit_identical": bool(k1_bit_identical),
+            "zero_warm_retraces": zero_retraces,
+            "serving_second_round_cached": second_all_cached,
+            "serving_bit_identical": serve_bit_identical,
+            "zero_stale_responses": serving["stale_responses"] == 0,
+        },
+    }
+    assert monotone, f"scanned fraction not monotone in budget: {scanned}"
+    assert improvement_4x >= gate, (
+        f"4x budget improved scanned fraction only {improvement_4x:.2f}x "
+        f"(gate {gate}x)"
+    )
+    assert k1_bit_identical, "k=1 diverged from the single-tree path"
+    assert zero_retraces, (
+        f"replica routing retraced warm plans: "
+        f"{ {k: per_k[f'k{k}']['warm_retraces'] for k in BUDGETS} }"
+    )
+    assert second_all_cached, "repeated mix not fully served from cache"
+    assert serve_bit_identical, (
+        "served replica answers diverged from cheapest-replica routing"
+    )
+    assert serving["stale_responses"] == 0, "stale responses served"
+    out = OUT.with_stem(OUT.stem + "_smoke") if smoke else OUT
+    out.write_text(json.dumps(results_doc, indent=2))
+    print(f"[replication] wrote {out}")
+    return results_doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="jax",
+                    choices=("numpy", "jax", "pallas"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (same assertions)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, backend=args.backend, seed=args.seed)

@@ -40,7 +40,9 @@ from repro.engine import LayoutEngine, pad_bucket, trace_counts
 from repro.engine import plan as planlib
 from repro.service import (
     DriftConfig,
+    IngestOptions,
     LayoutService,
+    RebuildPolicy,
     TrackerConfig,
     WorkloadTracker,
     build_layout,
@@ -109,10 +111,10 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
         n_buckets=256, n_gens=32, decay=0.5, infer_top_k=20, infer_budget=64
     )
     tracker = svc.workload_tracker(tracker_cfg)
-    rebuilder = svc.auto_rebuilder(
-        "auto",  # no declared workload anywhere in the drift loop
+    rebuilder = svc.auto_rebuilder(RebuildPolicy(
+        workload="auto",  # no declared workload anywhere in the drift loop
         tracker=tracker,
-        config=DriftConfig(
+        drift=DriftConfig(
             # absolute rule + deep hysteresis: by the time the trigger
             # fires, the decayed sketch has seen enough post-shift rounds
             # that the inferred mix ~= the true live mix (a hair-trigger
@@ -123,7 +125,7 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
         reservoir_capacity=phase_b.shape[0],
         executor="sync",  # deterministic: rebuild fires inside observe()
         rebuild_kw=dict(min_block=min_block, seed=seed),
-    )
+    ))
 
     def _warm(sample: np.ndarray) -> None:
         """Compile the live generation's plans: the routing + fused-ingest
@@ -152,7 +154,7 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
         live = work_a if i * batch < shift_at else work_b  # silent shift
         rounds.append(serve_round(rng, live))
         svc.serve(rounds[-1], tracker=tracker)
-        rep = svc.ingest([b], monitor=rebuilder)
+        rep = svc.ingest([b], options=IngestOptions(monitor=rebuilder))
         rates.append(rep.observation.scanned_fraction)
         delta = planlib.trace_delta(t0, trace_counts())
         if svc.generation != gen_seen:

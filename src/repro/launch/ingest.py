@@ -42,7 +42,12 @@ from repro.core import query as qry
 from repro.data import datagen, workload as wl
 from repro.data.blocks import BlockBuffers
 from repro.engine import pad_bucket, trace_counts
-from repro.service import DriftConfig, LayoutService
+from repro.service import (
+    DriftConfig,
+    IngestOptions,
+    LayoutService,
+    RebuildPolicy,
+)
 
 
 def make_workload(name: str, rows: int, seed: int):
@@ -170,6 +175,14 @@ def main() -> None:
     ap.add_argument("--drift-reservoir", type=int, default=65536,
                     help="recent-record reservoir capacity rebuilds "
                          "train on")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica count for drift-triggered rebuilds: "
+                         "k>1 deploys a k-replica set with cheapest-"
+                         "replica routing (k x storage)")
+    ap.add_argument("--lam", type=float, default=0.25,
+                    help="uniform-prior blend weight for per-replica "
+                         "workload clusters (0=pure inferred mix, "
+                         "1=pure uniform)")
     ap.add_argument("--store", default=None,
                     help="optional path to persist the ingested BlockStore")
     ap.add_argument("--seed", type=int, default=0)
@@ -206,10 +219,10 @@ def main() -> None:
     monitor = None
     if args.drift:
         rel = args.drift_rel if args.drift_rel > 0 else None
-        monitor = service.auto_rebuilder(
-            "auto" if args.workload == "auto" else work,
+        monitor = service.auto_rebuilder(RebuildPolicy(
+            workload="auto" if args.workload == "auto" else work,
             tracker=tracker,
-            config=DriftConfig(
+            drift=DriftConfig(
                 window=args.drift_window,
                 min_fill=max(args.drift_window // 4, 1),
                 abs_threshold=args.drift_abs,
@@ -217,6 +230,8 @@ def main() -> None:
                 hysteresis=args.drift_hysteresis,
                 cooldown=args.drift_cooldown,
             ),
+            replicas=args.replicas,
+            lam=args.lam,
             reservoir_capacity=args.drift_reservoir,
             # auto mode derives candidate cuts from the *inferred*
             # workload at trigger time — pinning the declared cut table
@@ -228,7 +243,7 @@ def main() -> None:
                     cuts=cuts, min_block=args.min_block, seed=args.seed
                 )
             ),
-        )
+        ))
         print(
             f"[ingest] drift monitor on: window={args.drift_window} "
             f"abs={args.drift_abs} rel={rel} "
@@ -277,7 +292,9 @@ def main() -> None:
         if monitor is None and tracker is None:
             shard_rounds = [service.ingest_sharded(
                 records, args.shards, batch=args.batch, buffers=buffers,
-                executor=args.executor, fused=fused,
+                options=IngestOptions(
+                    executor=args.executor, fused=fused
+                ),
             )]
             report = shard_rounds[0]
         else:
@@ -305,8 +322,11 @@ def main() -> None:
                     )
                 shard_rounds.append(service.ingest_sharded(
                     records[s : s + chunk], args.shards, batch=args.batch,
-                    buffers=buffers, monitor=monitor,
-                    executor=args.executor, fused=fused,
+                    buffers=buffers,
+                    options=IngestOptions(
+                        monitor=monitor, executor=args.executor,
+                        fused=fused,
+                    ),
                 ))
             report = merge_round_reports(shard_rounds)
         last = shard_rounds[-1]
@@ -346,14 +366,15 @@ def main() -> None:
             )
             round_reports.append(service.ingest(
                 micro_batches(records[off : off + n_round], round_sizes),
-                buffers=buffers, monitor=monitor, fused=fused,
+                buffers=buffers,
+                options=IngestOptions(monitor=monitor, fused=fused),
             ))
             off += n_round
         report = merge_round_reports(round_reports)
     else:
         report = service.ingest(
-            micro_batches(records, sizes), buffers=buffers, monitor=monitor,
-            fused=fused,
+            micro_batches(records, sizes), buffers=buffers,
+            options=IngestOptions(monitor=monitor, fused=fused),
         )
     print(
         f"[ingest] {report.n_records} records / {report.n_batches} "
@@ -375,11 +396,17 @@ def main() -> None:
                 f"{report.observation.n_records} observed records"
             )
         for ev in monitor.events:
+            if ev.deployed:
+                # single-tree rebuilds carry new_generation; replica
+                # rebuilds carry the whole set's new_generations
+                gens = getattr(
+                    ev.report, "new_generation", None
+                ) or tuple(getattr(ev.report, "new_generations", ()))
+                deployed_what = f"deployed gen {gens}"
             what = (
                 f"skipped ({ev.skipped})" if ev.skipped
                 else f"error ({ev.error})" if ev.error
-                else "deployed gen "
-                     f"{ev.report.new_generation}" if ev.deployed
+                else deployed_what if ev.deployed
                 else "kept live tree (candidate not better)"
             )
             print(

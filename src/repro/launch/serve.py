@@ -75,6 +75,14 @@ def main(argv=None) -> dict:
                     choices=("numpy", "jax", "pallas"))
     ap.add_argument("--strategy", default="greedy")
     ap.add_argument("--min-block", type=int, default=600)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica count for the mid-run rebuild: k>1 "
+                         "clusters the inferred mix into k workload "
+                         "clusters and deploys one qd-tree per cluster "
+                         "with cheapest-replica routing (k x storage)")
+    ap.add_argument("--lam", type=float, default=0.25,
+                    help="uniform-prior blend weight for per-replica "
+                         "workload clusters")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -122,20 +130,43 @@ def main(argv=None) -> dict:
             # workload in the loop — and hot-swap under live traffic
             inferred = tracker.infer_workload()
             target = inferred if len(inferred) else work
-            rep = service.rebuild(
-                records, target, min_block=args.min_block, seed=args.seed,
-            )
-            server.warm(work)  # new generation's plans: swap cost
-            swap_note = {
-                "swapped": rep.swapped,
-                "generation": service.generation,
-                "inferred_queries": len(inferred),
-            }
-            print(
-                f"[serve] mid-run rebuild from inferred mix "
-                f"({len(inferred)} weighted queries): "
-                f"{'swapped to gen ' + str(rep.new_generation) if rep.swapped else 'kept gen ' + str(rep.old_generation)}"
-            )
+            if args.replicas > 1:
+                rep = service.rebuild_replicas(
+                    records, workload=target, k=args.replicas,
+                    lam=args.lam, min_block=args.min_block,
+                    seed=args.seed,
+                )
+                server.warm(work)  # every replica's plans: swap cost
+                swap_note = {
+                    "swapped": rep.swapped,
+                    "replicas": rep.k,
+                    "generation": service.generation,
+                    "replica_generations": list(
+                        service.replica_generations()
+                    ),
+                    "inferred_queries": len(inferred),
+                }
+                print(
+                    f"[serve] mid-run replica rebuild from inferred mix "
+                    f"({len(inferred)} weighted queries, k={rep.k}): "
+                    f"{'deployed gens ' + str(rep.new_generations) if rep.swapped else 'kept gens ' + str(rep.old_generations)}"
+                )
+            else:
+                rep = service.rebuild(
+                    records, target, min_block=args.min_block,
+                    seed=args.seed,
+                )
+                server.warm(work)  # new generation's plans: swap cost
+                swap_note = {
+                    "swapped": rep.swapped,
+                    "generation": service.generation,
+                    "inferred_queries": len(inferred),
+                }
+                print(
+                    f"[serve] mid-run rebuild from inferred mix "
+                    f"({len(inferred)} weighted queries): "
+                    f"{'swapped to gen ' + str(rep.new_generation) if rep.swapped else 'kept gen ' + str(rep.old_generation)}"
+                )
         t_due = t0 + i / args.qps
         now = time.perf_counter()
         if now < t_due:

@@ -18,6 +18,7 @@ from repro.serve.cache import (
     EXACT_RESOLUTION,
     CacheStats,
     Epoch,
+    EpochLike,
     ResultCache,
     exact_signatures,
 )
@@ -38,6 +39,7 @@ __all__ = [
     "AdmissionStats",
     "CacheStats",
     "Epoch",
+    "EpochLike",
     "LatencyRecorder",
     "QueryServer",
     "QueryTicket",

@@ -20,13 +20,17 @@ layout):
   ``query_hits`` — a hit can never alias two queries that route
   differently.  (The tracker's *sketch* signatures stay coarsely bucketed
   on purpose: aggregation wants collisions, a result cache must not.)
-* **Epoch-keyed entries.**  Every entry is keyed by the serving *epoch*
-  ``(generation, desc_version)``: hot swaps bump the generation
+* **Epoch-keyed entries.**  Every entry is keyed by the serving
+  :class:`~repro.service.epoch.Epoch` ``(generation, desc_version,
+  replica_id)``: hot swaps bump the generation
   (:meth:`LayoutService.swap`), in-place tightening bumps the leaf
   description version (``FrozenQdTree.tighten``), and either makes every
   prior entry unreachable — exactly the plan-cache eviction rule, applied
-  to results.  Lookups always pass the *live* epoch, so a retired entry
-  cannot be returned even before :meth:`ResultCache.activate` purges it.
+  to results.  Lookups always pass the *live* epoch(s), so a retired
+  entry cannot be returned even before :meth:`ResultCache.activate`
+  purges it.  Replicated layouts activate one epoch PER replica:
+  hot-swapping replica r retires only entries whose epoch carries
+  ``replica_id == r`` — the other replicas' results stay warm.
 """
 
 from __future__ import annotations
@@ -34,12 +38,13 @@ from __future__ import annotations
 import dataclasses
 import threading
 from collections import OrderedDict
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import query as qry
 from repro.core import predicates as preds
+from repro.service.epoch import Epoch
 from repro.service.tracker import adv_filter_for, query_signatures
 
 # bucket_lo/bucket_hi return bounds unchanged once n_buckets >= the column
@@ -47,21 +52,30 @@ from repro.service.tracker import adv_filter_for, query_signatures
 # lossless (signatures are fixed points trivially).
 EXACT_RESOLUTION = 1 << 62
 
-#: A serving epoch: (layout generation, leaf-description version).
-Epoch = tuple[int, int]
+#: Anything :func:`Epoch.of` coerces: an Epoch or a legacy
+#: ``(generation, desc_version[, replica_id])`` tuple.
+EpochLike = Union[Epoch, tuple]
 
 
 def exact_signatures(
-    workload: qry.Workload, cuts: Optional[preds.CutTable] = None
+    workload: qry.Workload,
+    cuts: Optional[preds.CutTable] = None,
+    adv_filter: Optional[frozenset] = None,
 ) -> list[tuple]:
     """Per-query lossless cache keys (PR 5 canonicalization, exact bounds).
 
     ``cuts`` restricts advanced atoms to the cut table's — the tensorized
     routing path cannot see non-cut advanced atoms, so two queries that
     differ only in one must share a key (they route identically).
+    ``adv_filter`` passes a pre-computed filter instead (the replica
+    path: the UNION of every replica's cut-visible atoms, so one key
+    determines the tensorized form — and hence the cheapest-replica
+    choice — on every replica).
     """
+    if adv_filter is None:
+        adv_filter = adv_filter_for(cuts)
     return query_signatures(
-        workload, EXACT_RESOLUTION, adv_filter=adv_filter_for(cuts)
+        workload, EXACT_RESOLUTION, adv_filter=adv_filter
     )
 
 
@@ -111,39 +125,69 @@ class ResultCache:
         self.stats = CacheStats()
         self._lock = threading.Lock()
         self._entries: OrderedDict[tuple, np.ndarray] = OrderedDict()
-        self._epoch: Optional[Epoch] = None
+        # one activated epoch per replica_id; pre-replica callers only
+        # ever populate slot 0
+        self._epochs: dict[int, Epoch] = {}
 
     def __len__(self) -> int:
         return len(self._entries)
 
     @property
     def epoch(self) -> Optional[Epoch]:
-        return self._epoch
+        """The primary replica's activated epoch (compat surface)."""
+        return self._epochs.get(0)
 
-    def activate(self, epoch: Epoch) -> int:
-        """Pin the cache to ``epoch``; purge entries from any other.
+    def epochs(self) -> tuple[Epoch, ...]:
+        """Every activated epoch, replica order."""
+        with self._lock:
+            return tuple(
+                self._epochs[r] for r in sorted(self._epochs)
+            )
+
+    def activate(
+        self, epoch: Union[EpochLike, Sequence[EpochLike]]
+    ) -> int:
+        """Pin the cache to ``epoch`` (one Epoch, or a sequence — one per
+        replica); purge that replica's entries from any other epoch.
 
         Returns the number of entries invalidated.  Idempotent for the
-        current epoch (the fast path is one tuple compare under the
-        lock).  Rollbacks re-activate an *older* generation: its entries
-        were purged when it was swapped out, so it simply restarts cold —
+        current epoch (the fast path is one compare under the lock).
+        Invalidation is replica-scoped: activating a new epoch for
+        replica r leaves the other replicas' entries untouched — a hot
+        swap of one replica cannot cold-start the rest of the fleet.
+        Rollbacks re-activate an *older* generation: its entries were
+        purged when it was swapped out, so it simply restarts cold —
         correctness never depends on the purge, only hygiene does,
-        because lookups key on the live epoch.
+        because lookups key on the live epoch(s).
         """
+        if isinstance(epoch, Epoch) or (
+            isinstance(epoch, tuple) and epoch and not isinstance(
+                epoch[0], (Epoch, tuple)
+            )
+        ):
+            epochs = (Epoch.of(epoch),)
+        else:
+            epochs = tuple(Epoch.of(e) for e in epoch)
+        invalidated = 0
         with self._lock:
-            if self._epoch == epoch:
-                return 0
-            stale = [k for k in self._entries if k[0] != epoch]
-            for k in stale:
-                del self._entries[k]
-            self._epoch = epoch
-            self.stats.invalidated += len(stale)
-            self.stats.epoch_changes += 1
-            return len(stale)
+            for e in epochs:
+                if self._epochs.get(e.replica_id) == e:
+                    continue
+                stale = [
+                    k for k in self._entries
+                    if k[0].replica_id == e.replica_id and k[0] != e
+                ]
+                for k in stale:
+                    del self._entries[k]
+                self._epochs[e.replica_id] = e
+                self.stats.invalidated += len(stale)
+                self.stats.epoch_changes += 1
+                invalidated += len(stale)
+        return invalidated
 
-    def get(self, epoch: Epoch, sig: tuple) -> Optional[np.ndarray]:
+    def get(self, epoch: EpochLike, sig: tuple) -> Optional[np.ndarray]:
         """The cached block IDs for ``sig`` at ``epoch``, or None."""
-        key = (epoch, sig)
+        key = (Epoch.of(epoch), sig)
         with self._lock:
             bids = self._entries.get(key)
             if bids is None:
@@ -154,12 +198,27 @@ class ResultCache:
             return bids
 
     def get_many(
-        self, epoch: Epoch, sigs: list[tuple]
+        self, epoch: EpochLike, sigs: list[tuple]
     ) -> list[Optional[np.ndarray]]:
         """Batched :meth:`get`: one lock acquisition for a whole dispatch
         (the cache-hit serving path is lock-bound once signatures are
         memoized, so per-signature locking would dominate it)."""
-        out: list[Optional[np.ndarray]] = []
+        return [
+            pair[1] if pair is not None else None
+            for pair in self.lookup((epoch,), sigs)
+        ]
+
+    def lookup(
+        self, epochs: Sequence[EpochLike], sigs: list[tuple]
+    ) -> list[Optional[tuple[Epoch, np.ndarray]]]:
+        """Batched multi-replica lookup: for each signature, the first
+        hit across ``epochs`` (replica order) as ``(epoch, bids)``, else
+        None.  Exactly one hit-or-miss is counted per signature no
+        matter how many replicas are live — an entry lives under the
+        replica that routed it, so replica order is also cheapest-first
+        provenance."""
+        keys = tuple(Epoch.of(e) for e in epochs)
+        out: list[Optional[tuple[Epoch, np.ndarray]]] = []
         hits = 0
         with self._lock:
             entries = self._entries
@@ -169,28 +228,35 @@ class ResultCache:
             # anyway for a cache that never filled)
             touch = 2 * len(entries) > self.capacity
             for sig in sigs:
-                key = (epoch, sig)
-                bids = entries.get(key)
-                if bids is not None:
-                    if touch:
-                        entries.move_to_end(key)
+                found = None
+                for e in keys:
+                    key = (e, sig)
+                    bids = entries.get(key)
+                    if bids is not None:
+                        if touch:
+                            entries.move_to_end(key)
+                        found = (e, bids)
+                        break
+                if found is not None:
                     hits += 1
-                out.append(bids)
+                out.append(found)
             self.stats.hits += hits
             self.stats.misses += len(sigs) - hits
         return out
 
-    def put(self, epoch: Epoch, sig: tuple, bids: np.ndarray) -> bool:
+    def put(self, epoch: EpochLike, sig: tuple, bids: np.ndarray) -> bool:
         """Insert a routed result computed at ``epoch``.
 
         Returns False (and counts ``stale_puts``) when ``epoch`` is not
-        the activated one — the result was computed against a layout that
-        was retired while the dispatch was in flight.
+        the activated one for its replica — the result was computed
+        against a layout that was retired while the dispatch was in
+        flight.
         """
+        epoch = Epoch.of(epoch)
         value = np.asarray(bids, np.int32)
         value.setflags(write=False)
         with self._lock:
-            if self._epoch != epoch:
+            if self._epochs.get(epoch.replica_id) != epoch:
                 self.stats.stale_puts += 1
                 return False
             key = (epoch, sig)
@@ -205,10 +271,12 @@ class ResultCache:
 
     def snapshot(self) -> dict:
         with self._lock:
+            primary = self._epochs.get(0)
             return {
                 "size": len(self._entries),
                 "capacity": self.capacity,
-                "epoch": list(self._epoch) if self._epoch else None,
+                "epoch": list(primary) if primary else None,
+                "replicas": len(self._epochs),
                 **self.stats.as_dict(),
             }
 
@@ -217,6 +285,7 @@ __all__ = [
     "EXACT_RESOLUTION",
     "CacheStats",
     "Epoch",
+    "EpochLike",
     "ResultCache",
     "exact_signatures",
 ]

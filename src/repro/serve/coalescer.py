@@ -31,6 +31,7 @@ from typing import Iterable, Optional
 import numpy as np
 
 from repro.core import query as qry
+from repro.service.epoch import Epoch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,13 +94,15 @@ class AdmissionError(RuntimeError):
 class ServeResult:
     """One served query's answer, tagged with its provenance.
 
-    ``generation``/``desc_version`` identify the layout epoch the block
-    IDs were computed against — the staleness audit trail: a response
-    whose generation was retired *before* the request was submitted is a
-    stale read, and the serving tier's contract is that this never
-    happens.  Treat instances as read-only (``slots`` instead of
-    ``frozen``: one of these is allocated per served query, and frozen
-    dataclasses pay ``object.__setattr__`` per field on the hit path).
+    ``generation``/``desc_version``/``replica_id`` identify the layout
+    epoch the block IDs were computed against — the staleness audit
+    trail: a response whose generation was retired *before* the request
+    was submitted is a stale read, and the serving tier's contract is
+    that this never happens.  Under a replica set, ``replica_id`` names
+    which replica the cheapest-replica router picked.  Treat instances
+    as read-only (``slots`` instead of ``frozen``: one of these is
+    allocated per served query, and frozen dataclasses pay
+    ``object.__setattr__`` per field on the hit path).
     """
 
     bids: np.ndarray  # read-only (n,) int32 block IDs
@@ -107,10 +110,11 @@ class ServeResult:
     desc_version: int
     cached: bool
     latency_s: float
+    replica_id: int = 0
 
     @property
-    def epoch(self) -> tuple[int, int]:
-        return (self.generation, self.desc_version)
+    def epoch(self) -> Epoch:
+        return Epoch(self.generation, self.desc_version, self.replica_id)
 
 
 # Guards only the lazy wait-event creation below — never on the
@@ -135,6 +139,7 @@ class QueryTicket:
 
     __slots__ = (
         "query", "tenant", "submitted_at", "generation_at_submit",
+        "gens_at_submit",
         "_event", "_finished", "_result", "_error",
     )
 
@@ -143,6 +148,9 @@ class QueryTicket:
         self.tenant = tenant
         self.submitted_at = submitted_at
         self.generation_at_submit: int = -1  # stamped by the server
+        # per-replica generations live at submit time (stamped by the
+        # server when a replica set is serving); None when unstamped
+        self.gens_at_submit: Optional[tuple[int, ...]] = None
         self._event: Optional[threading.Event] = None
         self._finished = False
         self._result: Optional[ServeResult] = None

@@ -3,19 +3,28 @@
 Request flow (one dispatch):
 
     submit ──admission──▶ RequestQueue ──size-or-deadline──▶ _dispatch
-        capture live version ──▶ epoch = (generation, desc_version)
-        exact signatures ──▶ cache.get per request
-        misses (deduped by signature) ──▶ ONE route_queries dispatch
-        cache.put per unique miss ──▶ tracker.record(hits + misses) + tick
+        capture live replica set ──▶ one Epoch per replica
+        exact signatures ──▶ cache.lookup across the live epochs
+        misses (deduped by signature) ──▶ route: ONE route_queries
+            dispatch per replica, cheapest replica per query (Eq. 1
+            block counts) — a single-replica set degrades to exactly
+            one dispatch on the primary engine
+        cache.put per unique miss under the CHOSEN replica's epoch
+        tracker.record(hits + misses) + tick
         complete tickets (latency, provenance epoch, staleness audit)
 
 Soundness protocol (the worst-case framing of arXiv 2405.04984 — never
 serve block IDs from a retired layout):
 
-* the live :class:`~repro.service.service.LayoutVersion` is read ONCE per
-  dispatch attempt; epoch, signatures, cache traffic, and routing all use
-  that single capture, so a concurrent hot swap cannot mix generations
-  within one dispatch;
+* the live :class:`~repro.service.replica.ReplicaSet` is read ONCE per
+  dispatch attempt; epochs, signatures, cache traffic, and routing all
+  use that single capture, so a concurrent hot swap cannot mix
+  generations within one dispatch;
+* under k > 1 replicas, cache keys use signatures built from the UNION
+  of every replica's cut-visible advanced atoms — equal keys then imply
+  an identical tensorized form on *every* replica, hence an identical
+  cheapest-replica choice, so a hit can never alias two queries that
+  would have been routed to different replicas;
 * a swap *during* routing is harmless for delivery — the outgoing tree is
   never mutated by a swap, so the routed lists stay bit-identical for
   their generation, and a response is only *stale* if its generation was
@@ -109,12 +118,16 @@ class QueryServer:
         self._running = False
         self._thread: Optional[threading.Thread] = None
         self._closed = False
-        self.cache.activate(self._epoch_of(service.live_version()))
+        self.cache.activate(service.live_epochs())
         service.subscribe(self._on_swap)
 
     @staticmethod
     def _epoch_of(live) -> Epoch:
-        return (live.generation, planlib.desc_version(live.tree))
+        return Epoch(
+            live.generation,
+            planlib.desc_version(live.tree),
+            getattr(live, "replica_id", 0),
+        )
 
     def _on_swap(self, version) -> None:
         # prompt hygiene purge; soundness never depends on it (lookups key
@@ -171,6 +184,7 @@ class QueryServer:
         """Admit one query (raises AdmissionError when bounds are hit)."""
         ticket = self.queue.submit(query, tenant)
         ticket.generation_at_submit = self.service.generation
+        ticket.gens_at_submit = self.service.replica_generations()
         return ticket
 
     def serve(
@@ -201,8 +215,10 @@ class QueryServer:
         # geometry next_batch would have produced)
         tickets = self.queue.submit_many(queries, tenant, enqueue=False)
         gen = self.service.generation
+        gens = self.service.replica_generations()
         for t in tickets:
             t.generation_at_submit = gen
+            t.gens_at_submit = gens
         mb = self.config.max_batch
         for i in range(0, len(tickets), mb):
             self._dispatch(tickets[i:i + mb])
@@ -220,13 +236,15 @@ class QueryServer:
             n += 1
 
     def warm(self, sample: qry.Workload) -> None:
-        """Compile the live generation's query plans for every coalesced
+        """Compile EVERY live replica's query plans for every coalesced
         dispatch geometry (power-of-two batch sizes up to ``max_batch``,
         queries drawn from ``sample``), so steady-state serving performs
         ZERO retraces — call after construction and after each hot swap
         (the benchmark does; compile cost is swap cost, not serve cost).
+        The replica router tensorizes the same miss batch per replica,
+        so each replica engine needs its own warm plans.
         """
-        live = self.service.live_version()
+        rset = self.service.live_replica_set()
         if not len(sample):
             return
         sizes = []
@@ -243,7 +261,8 @@ class QueryServer:
                     for i in range(n)
                 ),
             )
-            live.engine.query_hits(wl.tensorize(live.tree.cuts))
+            for v in rset.versions:
+                v.engine.query_hits(wl.tensorize(v.tree.cuts))
 
     # -- the dispatch core ---------------------------------------------------
     def _dispatch(self, tickets: list[QueryTicket]) -> None:
@@ -252,56 +271,80 @@ class QueryServer:
         cfg = self.config
         try:
             for attempt in range(cfg.max_swap_retries + 1):
-                live = self.service.live_version()
-                epoch = self._epoch_of(live)
-                self.cache.activate(epoch)
+                rset = self.service.live_replica_set()
+                live = rset.primary
+                epochs = rset.epochs()
+                self.cache.activate(epochs)
                 wl_all = qry.Workload(
                     live.tree.schema, tuple(t.query for t in tickets)
                 )
-                sigs = exact_signatures(wl_all, live.tree.cuts)
-                hits = self.cache.get_many(epoch, sigs)
+                if rset.k == 1:
+                    sigs = exact_signatures(wl_all, live.tree.cuts)
+                else:
+                    sigs = exact_signatures(
+                        wl_all, adv_filter=rset.adv_filter()
+                    )
+                found = self.cache.lookup(epochs, sigs)
                 miss_index: dict[tuple, int] = {}
                 miss_queries: list[qry.Query] = []
-                for t, sig, h in zip(tickets, sigs, hits):
+                for t, sig, h in zip(tickets, sigs, found):
                     if h is None and sig not in miss_index:
                         miss_index[sig] = len(miss_queries)
                         miss_queries.append(t.query)
                 routed: list[np.ndarray] = []
+                miss_epochs: list[Epoch] = []
                 if miss_queries:
                     miss_wl = qry.Workload(
                         live.tree.schema, tuple(miss_queries)
                     )
-                    # tensorize against the captured tree's cuts directly:
-                    # one dispatch per miss batch, no wt-LRU churn from
-                    # ephemeral per-batch workload objects
-                    routed = live.engine.route_queries(
-                        miss_wl.tensorize(live.tree.cuts)
-                    )
+                    if rset.k == 1:
+                        # tensorize against the captured tree's cuts
+                        # directly: one dispatch per miss batch, no
+                        # wt-LRU churn from ephemeral per-batch
+                        # workload objects
+                        routed = live.engine.route_queries(
+                            miss_wl.tensorize(live.tree.cuts)
+                        )
+                        miss_epochs = [epochs[0]] * len(routed)
+                        n_dispatches = 1
+                    else:
+                        routes = rset.route_queries(miss_wl)
+                        routed = [r.bids for r in routes]
+                        miss_epochs = [epochs[r.replica_id]
+                                       for r in routes]
+                        n_dispatches = rset.k
                     with self._mutate:
-                        self.counters.engine_dispatches += 1
+                        self.counters.engine_dispatches += n_dispatches
                         self.counters.queries_routed += len(miss_queries)
-                    # a desc_version bump mid-route means the tree's leaf
-                    # descriptions were tightened UNDER the dispatch —
-                    # results may be torn across versions: re-dispatch
-                    if planlib.desc_version(live.tree) != epoch[1]:
+                    # a desc_version bump mid-route means some tree's
+                    # leaf descriptions were tightened UNDER the
+                    # dispatch — results may be torn: re-dispatch
+                    torn = any(
+                        planlib.desc_version(v.tree) != e.desc_version
+                        for v, e in zip(rset.versions, epochs)
+                    )
+                    if torn:
                         if attempt < cfg.max_swap_retries:
                             with self._mutate:
                                 self.counters.swap_retries += 1
                             continue
-                swapped = self.service.live_version() is not live
-                if miss_queries and (
-                    swapped or planlib.desc_version(live.tree) != epoch[1]
-                ):
-                    # deliverable (old tree is immutable across a swap) but
-                    # the epoch is retired — never cache retired results
+                swapped = self.service.live_replica_set() is not rset
+                torn_now = any(
+                    planlib.desc_version(v.tree) != e.desc_version
+                    for v, e in zip(rset.versions, epochs)
+                )
+                if miss_queries and (swapped or torn_now):
+                    # deliverable (old trees are immutable across a swap)
+                    # but the epoch is retired — never cache retired
+                    # results
                     with self._mutate:
                         self.counters.uncached_dispatches += 1
                 else:
                     for sig, i in miss_index.items():
-                        self.cache.put(epoch, sig, routed[i])
+                        self.cache.put(miss_epochs[i], sig, routed[i])
                 self._record(wl_all, live)
-                self._complete(tickets, sigs, hits, routed, miss_index,
-                               epoch)
+                self._complete(tickets, sigs, found, routed, miss_index,
+                               miss_epochs)
                 return
         except BaseException as e:
             for t in tickets:
@@ -321,31 +364,47 @@ class QueryServer:
         if self.config.tick_every and n % self.config.tick_every == 0:
             self.tracker.tick()
 
-    def _complete(self, tickets, sigs, hits, routed, miss_index, epoch):
+    def _complete(self, tickets, sigs, found, routed, miss_index,
+                  miss_epochs):
         done_at = self.clock()
-        live_gen_now = self.service.generation
-        generation, desc_version = epoch
+        live_gens = self.service.replica_generations()
         n_cached = 0
         n_stale = 0
         latencies = []
-        for t, sig, h in zip(tickets, sigs, hits):
+        for t, sig, h in zip(tickets, sigs, found):
             cached = h is not None
+            if cached:
+                epoch, bids = h
+            else:
+                i = miss_index[sig]
+                epoch, bids = miss_epochs[i], routed[i]
             lat = done_at - t.submitted_at
             n_cached += cached
             latencies.append(lat)
-            # the audit: a response is stale iff its generation was retired
-            # BEFORE the request was submitted (rollback re-liveness is not
-            # staleness — the generation is serving again)
-            if generation < t.generation_at_submit and (
-                generation != live_gen_now
+            # the audit, per replica: a response is stale iff the serving
+            # replica's generation was retired BEFORE the request was
+            # submitted (rollback re-liveness is not staleness — the
+            # generation is serving again)
+            rid = epoch.replica_id
+            gat = t.gens_at_submit
+            gen_at_submit = (
+                gat[rid] if gat is not None and rid < len(gat)
+                else t.generation_at_submit
+            )
+            live_gen_now = (
+                live_gens[rid] if rid < len(live_gens) else live_gens[0]
+            )
+            if epoch.generation < gen_at_submit and (
+                epoch.generation != live_gen_now
             ):
                 n_stale += 1
             t._complete(ServeResult(
-                bids=h if cached else routed[miss_index[sig]],
-                generation=generation,
-                desc_version=desc_version,
+                bids=bids,
+                generation=epoch.generation,
+                desc_version=epoch.desc_version,
                 cached=cached,
                 latency_s=lat,
+                replica_id=rid,
             ))
         with self._mutate:
             self.counters.queries_served += len(tickets)

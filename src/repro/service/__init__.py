@@ -11,6 +11,13 @@ Public surface:
   WorkloadTracker / TrackerConfig / TrackerState —
                                            workload auto-detection from the
                                            serving path (inferred live mix)
+  Epoch                                  — the (generation, desc_version,
+                                           replica_id) serving identity
+  IngestOptions / RebuildPolicy          — typed option dataclasses for the
+                                           ingest / auto-rebuild surfaces
+  ReplicaSet / ReplicaRoute / ReplicaRebuildReport —
+                                           k-replica layouts with
+                                           cheapest-replica routing
 """
 
 from repro.service.builders import (  # noqa: F401
@@ -28,6 +35,19 @@ from repro.service.drift import (  # noqa: F401
     DriftMonitor,
     RebuildEvent,
     RecordReservoir,
+)
+from repro.service.epoch import Epoch  # noqa: F401
+from repro.service.options import (  # noqa: F401
+    IngestOptions,
+    RebuildPolicy,
+)
+from repro.service.replica import (  # noqa: F401
+    ReplicaRebuildReport,
+    ReplicaRoute,
+    ReplicaSet,
+    cluster_signatures,
+    cluster_workloads,
+    workload_signature_weights,
 )
 from repro.service.service import (  # noqa: F401
     LayoutService,

@@ -353,12 +353,40 @@ class AutoRebuilder:
         )
         self.rebuild_kw = dict(rebuild_kw or {})
         self.rebuild_kw.setdefault("swap", "if_better")
+        self.policy = None  # RebuildPolicy when built via from_policy
         self.on_event = on_event
         self.events: list[RebuildEvent] = []
         self._lock = threading.Lock()
         self._inflight: Optional[threading.Event] = None
         self._executor = executor
         self._own_executor: Optional[ThreadPoolExecutor] = None
+
+    @classmethod
+    def from_policy(
+        cls,
+        service,
+        policy,  # repro.service.options.RebuildPolicy
+        reservoir: Optional[RecordReservoir] = None,
+        on_event: Optional[Callable[["RebuildEvent"], None]] = None,
+    ) -> "AutoRebuilder":
+        """Construct from a typed :class:`RebuildPolicy` (the
+        consolidated ``auto_rebuilder`` surface).  A policy with
+        ``replicas > 1`` makes triggered rebuilds deploy a k-replica
+        set via ``service.rebuild_replicas`` (cheapest-replica routing,
+        ``lam`` uniform-prior blend) instead of a single tree."""
+        rb = cls(
+            service,
+            policy.workload,
+            config=policy.drift,
+            reservoir=reservoir,
+            reservoir_capacity=policy.reservoir_capacity,
+            executor=policy.executor,
+            rebuild_kw=dict(policy.rebuild_kw or {}),
+            on_event=on_event,
+            tracker=policy.tracker,
+        )
+        rb.policy = policy
+        return rb
 
     # -- stream plumbing -----------------------------------------------------
     def set_workload(self, workload, tracker=None) -> None:
@@ -456,9 +484,26 @@ class AutoRebuilder:
             if workload is not None and len(workload) == 0:
                 ev.skipped = "empty_workload"
                 return
-            report = self.service.rebuild(
-                records, workload, **self.rebuild_kw
-            )
+            policy = self.policy
+            if policy is not None and policy.replicas > 1:
+                # replica policy: the triggered rebuild deploys a whole
+                # k-replica set clustered from the tracked mix
+                report = self.service.rebuild_replicas(
+                    records,
+                    workload=workload,
+                    k=policy.replicas,
+                    lam=policy.lam,
+                    tracker=(
+                        self.tracker
+                        if isinstance(self.workload, str)
+                        else None
+                    ),
+                    **self.rebuild_kw,
+                )
+            else:
+                report = self.service.rebuild(
+                    records, workload, **self.rebuild_kw
+                )
             ev.report = report
             ev.deployed = bool(report.swapped)
             if report.swapped:

@@ -1,0 +1,131 @@
+"""Typed option surfaces for the LayoutService facade.
+
+Seven PRs of keyword accretion left ``LayoutService.ingest(observe=,
+monitor=, fused=)`` / ``ingest_sharded(..., executor=)`` /
+``auto_rebuilder(workload=, tracker=, config=)`` as an untyped kwarg
+sprawl — and the replica dimension would have multiplied it.  These
+dataclasses are the consolidated spellings:
+
+    svc.ingest(batches, IngestOptions(monitor=rebuilder, fused=False))
+    svc.ingest_sharded(records, 4, options=IngestOptions(executor="process"))
+    svc.auto_rebuilder(RebuildPolicy(workload="auto", tracker=t))
+
+The old kwargs remain accepted for one release via
+:func:`resolve_ingest_options` / the ``auto_rebuilder`` shim: each use
+raises a :class:`DeprecationWarning` naming the new spelling, then maps
+onto the dataclass — so existing callers keep working bit-identically
+while new code gets a typed surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+#: kwargs the IngestOptions shim lifts off ``ingest``/``ingest_sharded``.
+_INGEST_OPTION_KEYS = ("observe", "monitor", "fused", "executor")
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestOptions:
+    """How one ingest run observes, monitors, and parallelizes.
+
+    observe    Workload | WorkloadTensors | ObservationProbe — Eq. 1
+               per-batch skip accounting against a standing workload.
+    monitor    an :class:`~repro.service.drift.AutoRebuilder`: batches
+               tee into its reservoir and observations drive its drift
+               policy (may fire a background rebuild mid-stream).
+    fused      single-pass route+tighten kernels (default) vs the
+               two-pass route-then-tighten path.
+    executor   sharded ingest only: ``None``/``"thread"`` (shared-plan
+               thread pool), ``"process"`` (resident spawn workers), or
+               any ``concurrent.futures`` Executor.
+    """
+
+    observe: object = None
+    monitor: object = None
+    fused: bool = True
+    executor: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RebuildPolicy:
+    """When and how the service rebuilds itself.
+
+    workload     a declared standing Workload, or ``"auto"`` to score
+                 drift (and rebuild) against the tracker-inferred live
+                 mix.
+    tracker      the WorkloadTracker the serving path records into
+                 (``workload="auto"``; omitted, one is created).
+    drift        :class:`~repro.service.drift.DriftConfig` trigger
+                 policy (threshold + hysteresis + cooldown).
+    replicas     k > 1 makes triggered rebuilds deploy a k-replica
+                 set via :meth:`LayoutService.rebuild_replicas`
+                 (cheapest-replica routing); 1 keeps today's
+                 single-tree rebuild.
+    lam          uniform-prior blend weight for replica clustering
+                 (see ``repro.service.replica``).
+    reservoir_capacity  recent-record reservoir size for rebuilds.
+    executor     ``None`` (private worker thread), ``"sync"``
+                 (rebuild inline — deterministic tests/benchmarks),
+                 or any Executor.
+    rebuild_kw   extra kwargs forwarded to ``service.rebuild`` /
+                 ``service.rebuild_replicas`` (e.g. ``swap=``,
+                 ``strategy=``, ``min_block=``).
+    """
+
+    workload: object = "auto"
+    tracker: object = None
+    drift: object = None  # DriftConfig | None
+    replicas: int = 1
+    lam: float = 0.25
+    reservoir_capacity: int = 65536
+    executor: object = None
+    rebuild_kw: Optional[dict] = None
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if not 0.0 <= self.lam <= 1.0:
+            raise ValueError("lam must be in [0, 1]")
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new}",
+        DeprecationWarning,
+        stacklevel=4,  # user code → service facade → resolver → here
+    )
+
+
+def resolve_ingest_options(
+    options: Optional[IngestOptions],
+    kw: dict,
+    method: str,
+) -> IngestOptions:
+    """Fold deprecated loose kwargs out of ``kw`` into an IngestOptions.
+
+    Mutates ``kw`` (popping the lifted keys); the remainder passes
+    through to the engine layer untouched.  Mixing ``options`` with a
+    deprecated kwarg is an error — the shim exists to migrate call
+    sites, not to merge two spellings of the same thing.
+    """
+    lifted = {k: kw.pop(k) for k in _INGEST_OPTION_KEYS if k in kw}
+    if not lifted:
+        return options if options is not None else IngestOptions()
+    names = ", ".join(f"{k}=" for k in sorted(lifted))
+    if options is not None:
+        raise TypeError(
+            f"{method}() got both options=IngestOptions(...) and the "
+            f"deprecated loose kwarg(s) {names}; pass everything via "
+            f"IngestOptions"
+        )
+    _deprecated(
+        f"{method}({names})",
+        f"{method}(..., options=IngestOptions({names}...))",
+    )
+    return IngestOptions(**lifted)
+
+
+__all__ = ["IngestOptions", "RebuildPolicy", "resolve_ingest_options"]

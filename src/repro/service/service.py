@@ -27,8 +27,9 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from concurrent.futures import Executor
-from typing import Callable, Iterable, Optional
+import warnings
+from concurrent.futures import Executor  # noqa: F401 (re-export for callers)
+from typing import Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -39,15 +40,37 @@ from repro.engine.engine import WorkloadTensorCache
 from repro.engine import plan as planlib
 from repro.engine.plan import PlanKey
 from repro.service.builders import LayoutBuild, build_layout
+from repro.service.epoch import Epoch
+from repro.service.options import (
+    IngestOptions,
+    RebuildPolicy,
+    resolve_ingest_options,
+)
+from repro.service.replica import (
+    ReplicaRebuildReport,
+    ReplicaRoute,
+    ReplicaSet,
+    block_sizes_for,
+    cheapest_scanned_fraction,
+    cluster_workloads,
+    materialize_mix,
+    workload_signature_weights,
+)
 
 
 @dataclasses.dataclass
 class LayoutVersion:
-    """One deployed tree: generation counter + its engine + build artifact."""
+    """One deployed tree: generation counter + its engine + build artifact.
+
+    ``replica_id`` is the tree's position in the :class:`ReplicaSet` it
+    was deployed into (0 for the primary — and for every version of a
+    single-copy service).
+    """
 
     generation: int
     build: LayoutBuild
     engine: LayoutEngine
+    replica_id: int = 0
 
     @property
     def tree(self) -> FrozenQdTree:
@@ -97,6 +120,10 @@ class LayoutService:
         self._versions: dict[int, LayoutVersion] = {}
         self._swap_listeners: list[Callable[[LayoutVersion], None]] = []
         self._live = self._new_version(layout)
+        self._rset = ReplicaSet(
+            (self._live,),
+            (block_sizes_for(self._live.build, self._live.tree.n_leaves),),
+        )
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -114,10 +141,15 @@ class LayoutService:
             backend=backend,
         )
 
-    def _new_version(self, build: LayoutBuild) -> LayoutVersion:
+    def _new_version(
+        self,
+        build: LayoutBuild,
+        replica_id: int = 0,
+        engine: Optional[LayoutEngine] = None,
+    ) -> LayoutVersion:
         # all versions share self.plans: plan keys carry the tree signature,
         # so old and new compiled plans coexist during a cutover
-        eng = LayoutEngine(
+        eng = engine if engine is not None else LayoutEngine(
             build.tree,
             backend=self.backend,
             interpret=self.interpret,
@@ -125,7 +157,10 @@ class LayoutService:
             wt_cache=self._wt_cache,
         )
         self._gen += 1
-        v = LayoutVersion(generation=self._gen, build=build, engine=eng)
+        v = LayoutVersion(
+            generation=self._gen, build=build, engine=eng,
+            replica_id=replica_id,
+        )
         self._versions[v.generation] = v
         return v
 
@@ -155,17 +190,34 @@ class LayoutService:
         """
         return self._live
 
-    def live_epoch(self) -> tuple[int, int]:
-        """The serving epoch: ``(generation, leaf-description version)``.
+    def live_epoch(self) -> Epoch:
+        """The primary replica's serving :class:`Epoch`.
 
         Hot swaps and rollbacks change the generation; in-place
         tightening during ingest bumps the live tree's description
         version (changing ``query_hits`` results without a swap).  Either
         movement retires every result computed under the old epoch — this
         is the result-cache invalidation key (`repro.serve.cache`).
+        Replicated services have one epoch per replica:
+        :meth:`live_epochs`.
         """
         live = self._live
-        return (live.generation, planlib.desc_version(live.tree))
+        return Epoch(live.generation, planlib.desc_version(live.tree), 0)
+
+    def live_epochs(self) -> tuple[Epoch, ...]:
+        """Per-replica serving epochs of the live ReplicaSet (one
+        consistent read; index == replica_id)."""
+        return self._rset.epochs()
+
+    def live_replica_set(self) -> ReplicaSet:
+        """The live :class:`ReplicaSet` — ONE read of the swap pointer
+        (same consistency contract as :meth:`live_version`; its
+        ``primary`` is the version every single-tree API serves)."""
+        return self._rset
+
+    def replica_generations(self) -> tuple[int, ...]:
+        """Live generation per replica, index == replica_id."""
+        return self._rset.generations()
 
     def versions(self) -> tuple[int, ...]:
         """Retained generations, oldest first."""
@@ -179,6 +231,8 @@ class LayoutService:
             "generation": self.generation,
             "versions": self.versions(),
             "backend": self.backend,
+            "replicas": self._rset.k,
+            "replica_generations": self.replica_generations(),
             "plan_cache": self.plans.stats(),
         }
 
@@ -231,8 +285,19 @@ class LayoutService:
     def skip_stats(self, records, workload, **kw):
         return self._live.engine.skip_stats(records, workload, **kw)
 
-    def ingest(self, batches: Iterable[np.ndarray], monitor=None, **kw):
-        """Streaming ingestion into the live tree (``LayoutEngine.ingest``).
+    def ingest(
+        self,
+        batches: Iterable[np.ndarray],
+        options: Optional[IngestOptions] = None,
+        **kw,
+    ):
+        """Streaming ingestion into the live primary (``LayoutEngine.ingest``).
+
+        ``options`` is the typed :class:`IngestOptions` surface
+        (``observe``/``monitor``/``fused``); the loose kwargs of the same
+        names remain accepted for one release with a DeprecationWarning.
+        Remaining ``**kw`` passes through to the engine layer
+        (``tighten=``, ``buffers=``, ``backend=`` ...).
 
         With ``monitor`` (an :class:`~repro.service.drift.AutoRebuilder`),
         every batch is teed into the monitor's record reservoir and scored
@@ -246,8 +311,17 @@ class LayoutService:
         fed to the freshly rebaselined monitor, so one long stream cannot
         re-trigger redundant rebuilds against a tree that no longer
         serves; batches keep filling the reservoir throughout.
+
+        Replicated services ingest into the primary replica; secondary
+        replicas are read-optimized copies refreshed by the next
+        ``rebuild_replicas`` deploy (see ``repro.service.replica``).
         """
+        options = resolve_ingest_options(options, kw, "ingest")
         live = self._live
+        monitor = options.monitor
+        if options.observe is not None:
+            kw["observe"] = options.observe
+        kw.setdefault("fused", options.fused)
         if monitor is not None:
             # a workload="auto" monitor resolves to the tracker-inferred
             # live mix here, at the start of each run; an empty inference
@@ -271,21 +345,23 @@ class LayoutService:
         records: np.ndarray,
         n_shards: int,
         batch: int = 2048,
-        executor: "Executor | str | None" = None,
-        monitor=None,
+        options: Optional[IngestOptions] = None,
         **kw,
     ):
-        """Shard-parallel ingestion into the live tree (engine.sharded).
+        """Shard-parallel ingestion into the live primary (engine.sharded).
 
         Splits ``records`` contiguously across ``n_shards`` ShardIngestors
-        (a private thread pool by default; ``executor="process"`` runs
-        spawn-context workers against a pickled tree replica instead —
-        see ``sharded_ingest``), folds their ShardStates
-        associatively, and publishes the merged
-        tightening under the service lock — the description-version bump
-        evicts stale per-signature query plans exactly as a single-stream
-        ``ingest`` would, so readers hot-cut to the tightened descriptions
-        atomically.  Bit-identical to ``ingest`` over the same records.
+        (a private thread pool by default; ``IngestOptions(executor=
+        "process")`` runs spawn-context workers against a pickled tree
+        replica instead — see ``sharded_ingest``), folds their
+        ShardStates associatively, and publishes the merged tightening
+        under the service lock — the description-version bump evicts
+        stale per-signature query plans exactly as a single-stream
+        ``ingest`` would, so readers hot-cut to the tightened
+        descriptions atomically.  Bit-identical to ``ingest`` over the
+        same records.  The loose ``executor=``/``monitor=``/``observe=``/
+        ``fused=`` kwargs remain accepted for one release with a
+        DeprecationWarning.
 
         If another thread hot-swaps the live tree while the shards are
         routing, the merged tightening is NOT silently published into the
@@ -300,14 +376,19 @@ class LayoutService:
         """
         from repro.engine.sharded import sharded_ingest
 
+        options = resolve_ingest_options(options, kw, "ingest_sharded")
         live = self._live  # consistent engine/tree view for the whole run
+        monitor = options.monitor
+        if options.observe is not None:
+            kw["observe"] = options.observe
+        kw.setdefault("fused", options.fused)
         if monitor is not None and "observe" not in kw:
             observed = monitor.current_workload()
             if observed is not None and len(observed):
                 kw["observe"] = observed
         report = sharded_ingest(
             live.engine, records, n_shards, batch=batch,
-            executor=executor, lock=self._lock,
+            executor=options.executor, lock=self._lock,
             publish_check=lambda: self._live is live, **kw,
         )
         if monitor is not None:
@@ -316,12 +397,22 @@ class LayoutService:
                 monitor.observe(report.observation)
         return report
 
-    def auto_rebuilder(self, workload, config=None, **kw):
+    def auto_rebuilder(self, workload=None, config=None, **kw):
         """An :class:`~repro.service.drift.AutoRebuilder` bound to this
-        service: pass it as ``monitor=`` to ``ingest``/``ingest_sharded``
-        and the service becomes self-optimizing — skip-rate drift past the
-        configured policy triggers a background ``rebuild`` whose
-        deployment rides the same compare-and-swap as manual rebuilds.
+        service: pass it as the ingest monitor and the service becomes
+        self-optimizing — skip-rate drift past the configured policy
+        triggers a background ``rebuild`` whose deployment rides the same
+        compare-and-swap as manual rebuilds.
+
+        The typed spelling takes one :class:`RebuildPolicy`::
+
+            svc.auto_rebuilder(RebuildPolicy(workload="auto", tracker=t,
+                                             drift=DriftConfig(...)))
+
+        A policy with ``replicas > 1`` makes triggered rebuilds deploy a
+        k-replica set (``rebuild_replicas``) instead of a single tree.
+        The loose ``auto_rebuilder(workload, config=, tracker=)`` kwargs
+        remain accepted for one release with a DeprecationWarning.
 
         ``workload`` is either a declared standing
         :class:`~repro.core.query.Workload` or the string ``"auto"``:
@@ -333,6 +424,20 @@ class LayoutService:
         """
         from repro.service.drift import AutoRebuilder
 
+        if isinstance(workload, RebuildPolicy):
+            if config is not None:
+                raise TypeError(
+                    "config= does not combine with a RebuildPolicy; set "
+                    "RebuildPolicy(drift=...)"
+                )
+            return AutoRebuilder.from_policy(self, workload, **kw)
+        warnings.warn(
+            "auto_rebuilder(workload, config=, tracker=) is deprecated; "
+            "use auto_rebuilder(RebuildPolicy(workload=..., drift=..., "
+            "tracker=...))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return AutoRebuilder(self, workload, config=config, **kw)
 
     # -- lifecycle: swap / rollback / release --------------------------------
@@ -362,10 +467,15 @@ class LayoutService:
             fn(v)
 
     def swap(self, build: LayoutBuild) -> int:
-        """Deploy ``build`` as a new generation (atomic); returns it."""
+        """Deploy ``build`` as the new PRIMARY generation (atomic);
+        returns it.  Secondary replicas keep serving untouched — their
+        cache entries stay valid (per-replica invalidation)."""
         with self._lock:
             v = self._new_version(build)
             self._live = v  # single reference assignment — atomic swap
+            self._rset = self._rset.replace(
+                0, v, block_sizes_for(build, build.tree.n_leaves)
+            )
         self._notify_swap(v)
         return v.generation
 
@@ -380,15 +490,27 @@ class LayoutService:
                 return None
             v = self._new_version(build)
             self._live = v
+            self._rset = self._rset.replace(
+                0, v, block_sizes_for(build, build.tree.n_leaves)
+            )
         self._notify_swap(v)
         return v.generation
 
     def rollback(self, generation: Optional[int] = None) -> int:
-        """Make a retained generation live again (default: the previous)."""
+        """Make a retained generation live again FOR ITS REPLICA.
+
+        Rollback is per-replica: the restored version replaces only the
+        slot it was deployed into (its ``replica_id``); the other
+        replicas keep serving their current trees.  Default: the
+        primary's previous retained generation.  A generation whose
+        replica slot no longer exists (the live set shrank since it was
+        deployed) cannot be restored.
+        """
         with self._lock:
             if generation is None:
                 older = [
-                    g for g in self._versions if g < self._live.generation
+                    g for g, u in self._versions.items()
+                    if u.replica_id == 0 and g < self._live.generation
                 ]
                 if not older:
                     raise ValueError("no older generation to roll back to")
@@ -398,16 +520,40 @@ class LayoutService:
                 raise ValueError(
                     f"unknown or released generation {generation}; "
                     f"retained: {tuple(sorted(self._versions))}"
+                    f"{self._replica_holders()}"
                 )
-            self._live = v
+            rid = v.replica_id
+            if rid >= self._rset.k:
+                raise ValueError(
+                    f"generation {generation} was deployed as replica "
+                    f"{rid}, but the live set has k={self._rset.k}; "
+                    f"deploy a replica set of that size first"
+                )
+            self._rset = self._rset.replace(
+                rid, v, block_sizes_for(v.build, v.tree.n_leaves)
+            )
+            if rid == 0:
+                self._live = v
         self._notify_swap(v)
         return generation
+
+    def _replica_holders(self) -> str:
+        """``" (held by replica r0: 1, 2)"``-style suffix naming which
+        replica slot each retained generation belongs to."""
+        by_rid: dict[int, list[int]] = {}
+        for g in sorted(self._versions):
+            by_rid.setdefault(self._versions[g].replica_id, []).append(g)
+        parts = ", ".join(
+            f"r{rid}: {', '.join(map(str, gens))}"
+            for rid, gens in sorted(by_rid.items())
+        )
+        return f" (held by replica {parts})" if parts else ""
 
     def release(self, generation: int) -> int:
         """Drop a retained generation and evict its compiled plans.
 
-        Returns the number of plan-cache entries evicted.  The live
-        generation cannot be released.
+        Returns the number of plan-cache entries evicted.  A generation
+        live in ANY replica slot cannot be released.
 
         Plan signatures are refcounted across retained versions: when the
         released generation's tree also backs another retained generation
@@ -418,13 +564,18 @@ class LayoutService:
         would silently cold-start a generation that is still serving.
         """
         with self._lock:
-            if generation == self._live.generation:
-                raise ValueError("cannot release the live generation")
+            live_gens = self._rset.generations()
+            if generation in live_gens:
+                raise ValueError(
+                    f"cannot release the live generation (serving as "
+                    f"replica {live_gens.index(generation)})"
+                )
             v = self._versions.get(generation)
             if v is None:
                 raise ValueError(
                     f"unknown or released generation {generation}; "
                     f"retained: {tuple(sorted(self._versions))}"
+                    f"{self._replica_holders()}"
                 )
             del self._versions[generation]
             sig = planlib.tree_signature(v.tree)
@@ -501,6 +652,191 @@ class LayoutService:
             old_generation=live.generation,
             new_generation=new_gen,
             build_s=candidate.build_s,
+            score_s=score_s,
+        )
+
+    # -- replica sets: k layouts, cheapest-replica routing -------------------
+    def route_queries_cheapest(
+        self, workload: qry.Workload, backend: Optional[str] = None
+    ) -> list[ReplicaRoute]:
+        """Route every query to its cheapest live replica (Eq. 1 cost
+        per replica through the shared plan cache).  With k=1 this is
+        the plain batched ``route_queries`` answer plus its cost."""
+        return self._rset.route_queries(workload, backend=backend)
+
+    def deploy_replicas(
+        self,
+        builds: Sequence[LayoutBuild],
+        provenance: Optional[dict] = None,
+    ) -> ReplicaSet:
+        """Atomically deploy one build per replica slot (index ==
+        replica_id; the first becomes the primary every single-tree API
+        serves).  Each build gets its own generation; swap listeners
+        fire once per replica so the serving tier invalidates each
+        replica's cache entries."""
+        rset = self._deploy_replicas(builds, None, provenance, expected=None)
+        assert rset is not None
+        return rset
+
+    def _deploy_replicas(
+        self,
+        builds: Sequence[LayoutBuild],
+        engines: Optional[Sequence[LayoutEngine]],
+        provenance: Optional[dict],
+        expected: Optional[ReplicaSet],
+    ) -> Optional[ReplicaSet]:
+        """Deploy under the lock; with ``expected`` set this is a CAS on
+        the replica-set pointer (None return = baseline went stale)."""
+        builds = tuple(builds)
+        if not builds:
+            raise ValueError("deploy_replicas needs at least one build")
+        with self._lock:
+            if expected is not None and self._rset is not expected:
+                return None
+            versions = tuple(
+                self._new_version(
+                    b,
+                    replica_id=i,
+                    engine=engines[i] if engines is not None else None,
+                )
+                for i, b in enumerate(builds)
+            )
+            sizes = tuple(
+                block_sizes_for(b, b.tree.n_leaves) for b in builds
+            )
+            rset = ReplicaSet(versions, sizes, provenance)
+            self._rset = rset
+            self._live = versions[0]
+        for v in versions:
+            self._notify_swap(v)
+        return rset
+
+    def rebuild_replicas(
+        self,
+        records: np.ndarray,
+        workload: Optional[qry.Workload] = None,
+        k: int = 2,
+        lam: float = 0.25,
+        strategy: Optional[str] = None,
+        swap: str = "if_better",  # "if_better" | "always" | "never"
+        tracker=None,
+        top_k: int = 16,
+        budget: Optional[int] = 64,
+        **cfg,
+    ) -> ReplicaRebuildReport:
+        """Cluster the live mix into <= k workload clusters, build one
+        qd-tree replica per cluster, score the set against the live one
+        with cheapest-replica Eq. 1 routing, and hot-deploy on
+        improvement.
+
+        The clustering input is the ``tracker``'s top-k canonical
+        signatures when given (the serving-path inferred mix), else the
+        exact signature multiplicities of ``workload``.  Each cluster's
+        build workload blends its share of the mix with a uniform prior
+        over ALL tracked signatures (weight ``lam`` — the worst-case
+        guarantee blend of arXiv 2405.04984).  ``k=1`` degrades to one
+        replica built for the whole mix, i.e. today's single-copy path.
+
+        Scoring routes ``workload`` (or the materialized mix) through
+        both candidate and live sets with per-leaf record counts
+        measured on the SAME ``records`` — monotone in k by
+        construction, since each query takes its cheapest replica.
+        Deployment is a compare-and-swap on the replica-set pointer:
+        a concurrent deploy invalidates this cycle's comparison, so the
+        candidate is dropped (``swapped=False``).
+        """
+        if swap not in ("if_better", "always", "never"):
+            raise ValueError(f"invalid swap policy {swap!r}")
+        live_rset = self._rset  # consistent view for the whole cycle
+        schema = live_rset.primary.tree.schema
+        items = tracker.top_signatures(top_k) if tracker is not None else []
+        if not items:
+            if workload is None or not len(workload):
+                raise ValueError(
+                    "rebuild_replicas needs a tracker with recorded "
+                    "traffic or a non-empty workload to cluster"
+                )
+            items = workload_signature_weights(workload)
+        eval_wl = (
+            workload
+            if workload is not None and len(workload)
+            else materialize_mix(items, schema, budget)
+        )
+        if strategy is None:
+            from repro.service.builders import available_strategies
+
+            strategy = live_rset.primary.build.strategy
+            if strategy not in available_strategies():
+                strategy = "greedy"
+        cluster_wls, cluster_sigs = cluster_workloads(
+            items, schema, k, lam, budget
+        )
+        t0 = time.perf_counter()
+        builds = tuple(
+            build_layout(records, wl_c, strategy=strategy, **cfg)
+            for wl_c in cluster_wls
+        )
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        # candidate engines share the service plan cache so the deployed
+        # set starts warm; per-leaf sizes for BOTH sets come from the
+        # same records, making the Eq. 1 comparison apples-to-apples
+        cand_engines = tuple(
+            LayoutEngine(
+                b.tree,
+                backend=self.backend,
+                interpret=self.interpret,
+                plan_cache=self.plans,
+                wt_cache=self._wt_cache,
+            )
+            for b in builds
+        )
+        cand_sizes = [block_sizes_for(b, b.tree.n_leaves) for b in builds]
+        candidate_scanned = cheapest_scanned_fraction(
+            cand_engines, cand_sizes, eval_wl, len(records)
+        )
+        live_sizes = [
+            np.bincount(
+                v.engine.route(records), minlength=v.tree.n_leaves
+            ).astype(np.int64)
+            for v in live_rset.versions
+        ]
+        live_scanned = cheapest_scanned_fraction(
+            [v.engine for v in live_rset.versions],
+            live_sizes,
+            eval_wl,
+            len(records),
+        )
+        score_s = time.perf_counter() - t0
+        provenance = {
+            "k": int(k),
+            "lam": float(lam),
+            "strategy": strategy,
+            "clusters": len(builds),
+        }
+        old_gens = live_rset.generations()
+        deployed = None
+        if swap == "always":
+            deployed = self._deploy_replicas(
+                builds, cand_engines, provenance, expected=None
+            )
+        elif swap == "if_better" and candidate_scanned < live_scanned:
+            deployed = self._deploy_replicas(
+                builds, cand_engines, provenance, expected=live_rset
+            )
+        return ReplicaRebuildReport(
+            k=int(k),
+            lam=float(lam),
+            builds=builds,
+            clusters=tuple(cluster_sigs),
+            candidate_scanned=candidate_scanned,
+            live_scanned=live_scanned,
+            swapped=deployed is not None,
+            old_generations=old_gens,
+            new_generations=(
+                deployed.generations() if deployed is not None else old_gens
+            ),
+            build_s=build_s,
             score_s=score_s,
         )
 

@@ -292,6 +292,58 @@ def query_from_signature(sig: tuple, schema: Schema) -> Query:
     return Query.disjunction(conjuncts)
 
 
+def apportion_conjunct_budget(
+    items: list[tuple[tuple, float]], budget: int
+) -> tuple[list[tuple[tuple, float]], list[int]]:
+    """Integer multiplicities filling ``budget`` conjunct slots toward
+    each signature's weight-proportional share.
+
+    ``items`` is ``[(signature, weight), ...]`` heaviest-first.  Every
+    signature whose single copy fits is kept with >= 1 copy (heaviest
+    first); remaining slots fill largest-deficit-first (index breaks
+    ties) until no signature fits — so the conjunct count always lands
+    in ``(budget - max_cost, budget]`` and successive materializations
+    reuse ONE padded compilation.  Returns the kept items and their
+    multiplicities.  Shared by :meth:`TrackerState.infer_workload` and
+    the replica clustering's per-cluster mixes
+    (``repro.service.replica``) so both produce the same stable tensor
+    geometry.
+    """
+    costs = [max(len(sig), 1) for sig, _ in items]
+    # heaviest-first: keep every signature whose single copy fits
+    kept, used = [], 0
+    for (sig, w), c in zip(items, costs):
+        if used + c <= budget:
+            kept.append((sig, w, c))
+            used += c
+    if not kept:  # even the heaviest alone exceeds the budget
+        kept, used = [items[0] + (costs[0],)], costs[0]
+    items = [(s, w) for s, w, _ in kept]
+    costs = [c for _, _, c in kept]
+    total_w = sum(w for _, w in items) or 1.0
+    mults = [1] * len(items)
+    remaining = budget - used
+    # fill the remaining conjunct slots toward weight-proportional
+    # shares (largest deficit first; index breaks ties) until no
+    # signature fits — the bucket-stability guarantee
+    while True:
+        best = None
+        for i, c in enumerate(costs):
+            if c > remaining:
+                continue
+            deficit = (
+                items[i][1] / total_w * budget - mults[i] * c
+            )
+            key = (deficit, -i)
+            if best is None or key > best[0]:
+                best = (key, i)
+        if best is None:
+            break
+        mults[best[1]] += 1
+        remaining -= costs[best[1]]
+    return items, mults
+
+
 # ---------------------------------------------------------------------------
 # The sketch
 # ---------------------------------------------------------------------------
@@ -540,39 +592,7 @@ class TrackerState:
         if budget is None:
             mults = [1] * len(items)
         else:
-            budget = int(budget)
-            costs = [max(len(sig), 1) for sig, _ in items]
-            # heaviest-first: keep every signature whose single copy fits
-            kept, used = [], 0
-            for (sig, w), c in zip(items, costs):
-                if used + c <= budget:
-                    kept.append((sig, w, c))
-                    used += c
-            if not kept:  # even the heaviest alone exceeds the budget
-                kept, used = [items[0] + (costs[0],)], costs[0]
-            items = [(s, w) for s, w, _ in kept]
-            costs = [c for _, _, c in kept]
-            total_w = sum(w for _, w in items) or 1.0
-            mults = [1] * len(items)
-            remaining = budget - used
-            # fill the remaining conjunct slots toward weight-proportional
-            # shares (largest deficit first; index breaks ties) until no
-            # signature fits — the bucket-stability guarantee
-            while True:
-                best = None
-                for i, c in enumerate(costs):
-                    if c > remaining:
-                        continue
-                    deficit = (
-                        items[i][1] / total_w * budget - mults[i] * c
-                    )
-                    key = (deficit, -i)
-                    if best is None or key > best[0]:
-                        best = (key, i)
-                if best is None:
-                    break
-                mults[best[1]] += 1
-                remaining -= costs[best[1]]
+            items, mults = apportion_conjunct_budget(items, int(budget))
         queries: list[Query] = []
         for (sig, _), m in zip(items, mults):
             queries.extend([query_from_signature(sig, schema)] * m)
@@ -783,6 +803,7 @@ __all__ = [
     "TrackerConfig",
     "TrackerState",
     "WorkloadTracker",
+    "apportion_conjunct_budget",
     "bucket_hi",
     "bucket_lo",
     "merge_states",

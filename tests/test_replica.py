@@ -1,0 +1,464 @@
+"""Replica-set tests: k=1 bit-identity with the single-tree path
+(routing, serving, cache hits), cheapest-replica choice invariance under
+replica order permutation, per-replica cache invalidation and
+release/rollback semantics, the Epoch value type, and the typed
+IngestOptions/RebuildPolicy deprecation shim."""
+
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers without hypothesis
+    from tests._hypothesis_shim import given, settings, st
+
+from repro.core import query as qry
+from repro.serve import QueryServer, ResultCache, ServeConfig
+from repro.service import (
+    DriftConfig,
+    Epoch,
+    IngestOptions,
+    LayoutService,
+    RebuildPolicy,
+    ReplicaSet,
+    build_layout,
+    cluster_signatures,
+    cluster_workloads,
+    workload_signature_weights,
+)
+from repro.service.replica import blended_mix, materialize_mix
+from tests.test_qdtree import small_setup
+from tests.test_query import random_query
+
+
+def _setup(seed=0, n_queries=8):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(n_queries))
+    )
+    return schema, records, cuts, work
+
+
+def _service(seed=0, n_queries=8, backend="numpy", min_block=30):
+    schema, records, cuts, work = _setup(seed, n_queries)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, backend=backend,
+        min_block=min_block,
+    )
+    return schema, records, cuts, work, svc
+
+
+def _split_workload(work, parts=2):
+    """Deterministic partition of a workload's queries into sub-mixes."""
+    subs = []
+    for p in range(parts):
+        qs = tuple(
+            q for i, q in enumerate(work.queries) if i % parts == p
+        )
+        subs.append(qry.Workload(work.schema, qs))
+    return subs
+
+
+# ---------------------------------------------------------------------------
+# Epoch: the shared serving identity
+# ---------------------------------------------------------------------------
+def test_epoch_value_type():
+    e = Epoch(3, 7)
+    assert e.replica_id == 0
+    assert list(e) == [3, 7, 0]  # iterable, all three fields
+    assert e == Epoch(3, 7, 0)
+    assert hash(e) == hash(Epoch(3, 7, 0))
+    assert Epoch(2, 9, 0) < Epoch(3, 0, 0) < Epoch(3, 0, 1)
+    assert Epoch.of((3, 7)) == e  # legacy 2-tuple coercion
+    assert Epoch.of((3, 7, 2)) == Epoch(3, 7, 2)
+    assert Epoch.of(e) is e
+    with pytest.raises(ValueError):
+        Epoch.of((1,))
+    with pytest.raises(ValueError):
+        Epoch.of("nope")
+
+
+def test_service_epochs_are_epoch_instances():
+    _, _, _, _, svc = _service(11)
+    e = svc.live_epoch()
+    assert isinstance(e, Epoch)
+    assert e.replica_id == 0
+    assert svc.live_epochs() == (e,)
+    assert svc.replica_generations() == (svc.generation,)
+    assert svc.stats()["replicas"] == 1
+
+
+# ---------------------------------------------------------------------------
+# k=1 bit-identity: the replica path degrades to today's single-tree path
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_k1_routing_bit_identical_to_engine(seed):
+    schema, records, cuts, work, svc = _service(5)
+    rng = np.random.default_rng(seed)
+    probe = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(6))
+    )
+    direct = svc.engine.route_queries(probe.tensorize(svc.tree.cuts))
+    routes = svc.route_queries_cheapest(probe)
+    assert len(routes) == len(probe)
+    for d, r in zip(direct, routes):
+        assert r.replica_id == 0
+        np.testing.assert_array_equal(r.bids, d)
+
+
+def test_k1_replica_set_is_single_live_version():
+    _, _, _, _, svc = _service(6)
+    rset = svc.live_replica_set()
+    assert rset.k == 1
+    assert rset.primary is svc.live_version()
+    assert rset.epochs() == (svc.live_epoch(),)
+    # the k=1 cache-key filter is exactly the live tree's own filter
+    from repro.service.tracker import adv_filter_for
+
+    assert rset.adv_filter() == adv_filter_for(svc.tree.cuts)
+
+
+def test_k1_serving_counters_and_hits_match_single_tree_path():
+    """Serving the same mix twice on a k=1 service: second pass fully
+    cached, every answer bit-identical to direct engine routing, every
+    provenance epoch the primary's."""
+    schema, records, cuts, work, svc = _service(7, n_queries=6)
+    server = QueryServer(svc, ServeConfig(max_batch=8))
+    mix = [work.queries[i % len(work)] for i in range(12)]
+    r1 = server.serve_batch(mix)
+    r2 = server.serve_batch(mix)
+    assert all(not r.cached for r in r1[: len(work)])
+    assert all(r.cached for r in r2)
+    assert all(r.replica_id == 0 for r in r1 + r2)
+    assert all(r.epoch == svc.live_epoch() for r in r1 + r2)
+    direct = svc.engine.route_queries(
+        qry.Workload(schema, tuple(mix)).tensorize(svc.tree.cuts)
+    )
+    for res, d in zip(r2, direct):
+        np.testing.assert_array_equal(res.bids, d)
+    assert server.counters.stale_responses == 0
+    server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Cheapest-replica routing: permutation invariance + cost model
+# ---------------------------------------------------------------------------
+def _deploy_two(svc, records, cuts, work, order=(0, 1), min_block=30):
+    subs = _split_workload(work, 2)
+    builds = [
+        build_layout(records, s, strategy="greedy", cuts=cuts,
+                     min_block=min_block)
+        for s in subs
+    ]
+    return svc.deploy_replicas([builds[i] for i in order])
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_cheapest_choice_invariant_under_replica_permutation(seed):
+    """The chosen block IDs and Eq. 1 cost per query do not depend on
+    the order replicas were deployed in — the content tiebreak
+    ``(cost, n_blocks, bids bytes)`` is intrinsic to the answer."""
+    schema, records, cuts, work = _setup(9, n_queries=10)
+    rng = np.random.default_rng(seed)
+    probe = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(8))
+    )
+    routes = {}
+    for order in ((0, 1), (1, 0)):
+        svc = LayoutService.build(
+            records, work, strategy="greedy", cuts=cuts, backend="numpy",
+            min_block=30,
+        )
+        _deploy_two(svc, records, cuts, work, order)
+        routes[order] = svc.route_queries_cheapest(probe)
+    for a, b in zip(routes[(0, 1)], routes[(1, 0)]):
+        assert a.cost == b.cost
+        np.testing.assert_array_equal(a.bids, b.bids)
+
+
+def test_cheapest_route_is_argmin_over_replicas():
+    schema, records, cuts, work = _setup(4, n_queries=10)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, backend="numpy",
+        min_block=30,
+    )
+    rset = _deploy_two(svc, records, cuts, work)
+    assert rset.k == 2
+    probe = work
+    per_replica = [
+        v.engine.route_queries(probe.tensorize(v.tree.cuts))
+        for v in rset.versions
+    ]
+    routes = rset.route_queries(probe)
+    for qi, r in enumerate(routes):
+        costs = [
+            int(rset.block_sizes[i][per_replica[i][qi]].sum())
+            for i in range(rset.k)
+        ]
+        assert r.cost == min(costs)
+    # Eq. 1 under cheapest-replica routing can only improve on any
+    # single replica's scanned fraction (argmin per query)
+    frac = rset.scanned_fraction(probe, n_records=records.shape[0])
+    for i, v in enumerate(rset.versions):
+        single = sum(
+            int(rset.block_sizes[i][bids].sum())
+            for bids in per_replica[i]
+        ) / float(records.shape[0] * len(probe))
+        assert frac <= single + 1e-12
+
+
+def test_replica_set_validates_positions_and_replace():
+    _, _, _, _, svc = _service(2)
+    live = svc.live_version()
+    with pytest.raises(ValueError, match="ids must match positions"):
+        ReplicaSet((live, live))  # second slot carries replica_id 0
+    rset = svc.live_replica_set()
+    with pytest.raises(ValueError, match="not in live set"):
+        rset.replace(3, live)
+
+
+# ---------------------------------------------------------------------------
+# Serving a k-replica set: cache soundness, per-replica invalidation
+# ---------------------------------------------------------------------------
+def test_serving_replica_set_cached_and_bit_identical():
+    schema, records, cuts, work = _setup(8, n_queries=8)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, backend="numpy",
+        min_block=30,
+    )
+    rset = _deploy_two(svc, records, cuts, work)
+    server = QueryServer(svc, ServeConfig(max_batch=8))
+    mix = list(work.queries) * 2
+    r1 = server.serve_batch(mix)
+    r2 = server.serve_batch(mix)
+    assert all(r.cached for r in r2)
+    assert server.counters.stale_responses == 0
+    expected = rset.route_queries(qry.Workload(schema, tuple(mix)))
+    for res, exp in zip(r2, expected):
+        assert res.replica_id == exp.replica_id
+        np.testing.assert_array_equal(res.bids, exp.bids)
+    # provenance epochs carry the serving replica's id
+    assert {r.replica_id for r in r2} <= {0, 1}
+    server.stop()
+
+
+def test_result_cache_per_replica_invalidation():
+    cache = ResultCache(capacity=16)
+    e0, e1 = Epoch(1, 0, 0), Epoch(1, 0, 1)
+    cache.activate((e0, e1))
+    bids = np.arange(3, dtype=np.int32)
+    assert cache.put(e0, ("a",), bids)
+    assert cache.put(e1, ("b",), bids)
+    # swapping replica 1 retires ONLY replica 1's entries
+    cache.activate(Epoch(2, 0, 1))
+    assert cache.get(e0, ("a",)) is not None
+    assert cache.get(e1, ("b",)) is None
+    assert cache.stats.invalidated == 1
+    # lookup walks the live epochs in order, one count per signature
+    hits_before = cache.stats.hits
+    found = cache.lookup((e0, Epoch(2, 0, 1)), [("a",), ("b",)])
+    assert found[0] is not None and found[0][0] == e0
+    assert found[1] is None
+    assert cache.stats.hits == hits_before + 1
+
+
+def test_swap_primary_keeps_secondary_cache_entries():
+    schema, records, cuts, work = _setup(10, n_queries=8)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, backend="numpy",
+        min_block=30,
+    )
+    _deploy_two(svc, records, cuts, work)
+    server = QueryServer(svc, ServeConfig(max_batch=8))
+    mix = list(work.queries)
+    server.serve_batch(mix)
+    by_replica = {}
+    for res in server.serve_batch(mix):
+        by_replica.setdefault(res.replica_id, 0)
+        by_replica[res.replica_id] += 1
+    assert by_replica.get(1)  # the probe mix exercises both replicas
+    entries_before = len(server.cache)
+    invalidated_before = server.cache.stats.invalidated
+    # hot-swap the primary only: the swap listener's activation purges
+    # replica 0's entries and ONLY those — replica 1's survive in place
+    build = build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=40
+    )
+    svc.swap(build)
+    purged = server.cache.stats.invalidated - invalidated_before
+    assert purged == entries_before - len(server.cache)
+    assert len(server.cache) > 0  # replica 1's entries were NOT purged
+    r3 = server.serve_batch(mix)
+    assert all(r.replica_id in (0, 1) for r in r3)
+    assert server.counters.stale_responses == 0
+    server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: per-replica release / rollback errors
+# ---------------------------------------------------------------------------
+def test_release_names_replica_holding_generation():
+    schema, records, cuts, work = _setup(12)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, backend="numpy",
+        min_block=30,
+    )
+    rset = _deploy_two(svc, records, cuts, work)
+    g0, g1 = rset.generations()
+    with pytest.raises(ValueError, match="cannot release the live"):
+        svc.release(g0)
+    with pytest.raises(
+        ValueError, match=r"serving as replica 1"
+    ):
+        svc.release(g1)
+    with pytest.raises(ValueError, match=r"held by replica r0.*r1"):
+        svc.release(999)
+
+
+def test_rollback_is_per_replica():
+    schema, records, cuts, work = _setup(13)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, backend="numpy",
+        min_block=30,
+    )
+    first = _deploy_two(svc, records, cuts, work)
+    g0_old, g1_old = first.generations()
+    second = _deploy_two(svc, records, cuts, work, min_block=40)
+    assert svc.live_replica_set() is second
+    # roll back only the secondary replica: the primary stays current
+    got = svc.rollback(g1_old)
+    assert got == g1_old
+    rset = svc.live_replica_set()
+    assert rset.generations() == (second.generations()[0], g1_old)
+    assert svc.generation == second.generations()[0]
+    # default rollback targets the primary's previous generation
+    got = svc.rollback()
+    assert svc.generation == got
+    assert svc.live_replica_set().generations()[0] == got
+
+
+# ---------------------------------------------------------------------------
+# Clustering: determinism, k=1 degradation, the lam blend
+# ---------------------------------------------------------------------------
+def test_cluster_signatures_k1_and_determinism():
+    schema, _, _, work = _setup(14, n_queries=12)
+    items = workload_signature_weights(work)
+    assert cluster_signatures(items, schema, 1) == [
+        list(range(len(items)))
+    ]
+    a = cluster_signatures(items, schema, 3)
+    b = cluster_signatures(items, schema, 3)
+    assert a == b  # deterministic for a fixed input order
+    assert sorted(i for c in a for i in c) == list(range(len(items)))
+
+
+def test_blended_mix_lambda_endpoints():
+    schema, _, _, work = _setup(15, n_queries=10)
+    items = workload_signature_weights(work)
+    cluster = list(range(len(items) // 2))
+    # lam=0: pure cluster share — out-of-cluster signatures vanish
+    pure = blended_mix(items, cluster, 0.0)
+    assert {s for s, _ in pure} == {items[i][0] for i in cluster}
+    # lam=1: pure uniform prior — every signature, equal weight
+    uniform = blended_mix(items, cluster, 1.0)
+    assert len(uniform) == len(items)
+    ws = {w for _, w in uniform}
+    assert len(ws) == 1
+    with pytest.raises(ValueError):
+        blended_mix(items, cluster, 1.5)
+    wls, sigs = cluster_workloads(items, schema, 2, lam=0.25, budget=32)
+    assert len(wls) == len(sigs) <= 2
+    assert all(len(w) > 0 for w in wls)
+    assert len(materialize_mix(items, schema, budget=16)) > 0
+
+
+def test_rebuild_replicas_from_declared_workload():
+    schema, records, cuts, work = _setup(16, n_queries=12)
+    svc = LayoutService.build(
+        records, work, strategy="greedy", cuts=cuts, backend="numpy",
+        min_block=30,
+    )
+    single = svc.engine.skip_stats(
+        records, work, tighten=False
+    ).scanned_fraction
+    rep = svc.rebuild_replicas(
+        records, workload=work, k=2, lam=0.25, swap="always",
+        cuts=cuts, min_block=30,
+    )
+    assert rep.swapped
+    assert svc.live_replica_set().k == len(rep.builds)
+    assert rep.candidate_scanned <= single + 1e-9
+    # the deployed set serves the single-tree APIs through its primary
+    assert svc.live_version() is svc.live_replica_set().primary
+    with pytest.raises(ValueError, match="invalid swap policy"):
+        svc.rebuild_replicas(records, workload=work, swap="sometimes")
+    with pytest.raises(ValueError, match="needs a tracker"):
+        svc.rebuild_replicas(records, workload=None)
+
+
+# ---------------------------------------------------------------------------
+# The deprecation shim: old kwargs accepted, warned, behavior-identical
+# ---------------------------------------------------------------------------
+def _batches(records, n=4):
+    step = max(len(records) // n, 1)
+    for s in range(0, len(records), step):
+        yield records[s : s + step]
+
+
+def test_ingest_loose_kwargs_warn_and_match_options():
+    _, records, _, _, svc_a = _service(17)
+    _, _, _, _, svc_b = _service(17)
+    with pytest.warns(DeprecationWarning, match=r"ingest\(fused=\)"):
+        rep_old = svc_a.ingest(_batches(records), fused=False)
+    rep_new = svc_b.ingest(
+        _batches(records), options=IngestOptions(fused=False)
+    )
+    assert rep_old.n_records == rep_new.n_records
+    assert rep_old.n_batches == rep_new.n_batches
+
+
+def test_ingest_rejects_options_plus_loose_kwargs():
+    _, records, _, _, svc = _service(18)
+    with pytest.raises(TypeError, match="both"):
+        svc.ingest(
+            _batches(records), options=IngestOptions(fused=False),
+            fused=True,
+        )
+
+
+def test_ingest_sharded_executor_kwarg_warns():
+    _, records, _, _, svc = _service(19)
+    with pytest.warns(
+        DeprecationWarning, match=r"ingest_sharded\(executor=\)"
+    ):
+        rep = svc.ingest_sharded(records, 2, executor="thread")
+    assert rep.n_records == len(records)
+
+
+def test_auto_rebuilder_legacy_kwargs_warn():
+    _, _, _, work, svc = _service(20)
+    cfg = DriftConfig(window=4, min_fill=2, abs_threshold=0.9)
+    with pytest.warns(DeprecationWarning, match="auto_rebuilder"):
+        rb_old = svc.auto_rebuilder(work, config=cfg)
+    assert rb_old.monitor.config is cfg
+    rb_new = svc.auto_rebuilder(
+        RebuildPolicy(workload=work, drift=cfg, replicas=2, lam=0.5)
+    )
+    assert rb_new.monitor.config is cfg
+    assert rb_new.policy.replicas == 2
+    assert rb_new.policy.lam == 0.5
+    with pytest.raises(TypeError, match="does not combine"):
+        svc.auto_rebuilder(RebuildPolicy(workload=work), config=cfg)
+
+
+def test_rebuild_policy_validation():
+    with pytest.raises(ValueError):
+        RebuildPolicy(replicas=0)
+    with pytest.raises(ValueError):
+        RebuildPolicy(lam=1.5)
+    p = RebuildPolicy(replicas=3, lam=0.0)
+    assert p.replicas == 3 and p.lam == 0.0
