@@ -36,7 +36,16 @@ EXPECTATIONS = pathlib.Path(__file__).resolve().parent / (
 # smoke_expectations.json; "true" paths must simply be truthy (they are
 # the benchmarks' own acceptance booleans — re-checked here so a benchmark
 # that stops asserting can't rot unnoticed).
+#
+# The special "qdlint" entry is virtual: instead of reading a BENCH json
+# it runs the static-analysis pass live over src/ (baseline applied) and
+# pins the non-baselined finding count — invariant drift and lint drift
+# fail through the same gate.
 SPEC: dict[str, dict[str, list[str]]] = {
+    "qdlint": {
+        "equals": ["qdlint_findings"],
+        "true": [],
+    },
     "BENCH_query_routing_smoke.json": {
         "equals": [
             "n_queries",
@@ -207,6 +216,31 @@ SPEC: dict[str, dict[str, list[str]]] = {
 _MISSING = object()
 
 
+def qdlint_doc() -> dict:
+    """Run qdlint over src/ (repo baseline applied) → counter doc."""
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.analysis import DEFAULT_BASELINE, run as qdlint_run
+    finally:
+        sys.path.pop(0)
+    report = qdlint_run(
+        [ROOT / "src"], baseline=ROOT / DEFAULT_BASELINE
+    )
+    for f in report.findings:
+        print(f"[bench-invariants] qdlint: {f.render()}")
+    return {"qdlint_findings": len(report.findings)}
+
+
+def load_doc(root: pathlib.Path, fname: str):
+    """The counter doc for one SPEC entry, or None when unavailable."""
+    if fname == "qdlint":
+        return qdlint_doc()
+    path = root / fname
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
 def lookup(doc, path: str):
     cur = doc
     for part in path.split("."):
@@ -235,15 +269,14 @@ def check(root: pathlib.Path) -> int:
     expected = json.loads(EXPECTATIONS.read_text())
     failures = 0
     for fname, spec in SPEC.items():
-        path = root / fname
-        if not path.exists():
+        doc = load_doc(root, fname)
+        if doc is None:
             print(
                 f"[bench-invariants] FAIL {fname}: not found — run the "
                 f"smoke benchmarks first"
             )
             failures += 1
             continue
-        doc = json.loads(path.read_text())
         pinned = expected.get(fname, {})
         for key in spec["equals"]:
             got = lookup(doc, key)
@@ -288,14 +321,13 @@ def check(root: pathlib.Path) -> int:
 def update(root: pathlib.Path) -> int:
     out: dict[str, dict] = {}
     for fname, spec in SPEC.items():
-        path = root / fname
-        if not path.exists():
+        doc = load_doc(root, fname)
+        if doc is None:
             print(
                 f"[bench-invariants] cannot update: {fname} not found — "
                 f"run the smoke benchmarks first"
             )
             return 1
-        doc = json.loads(path.read_text())
         pinned = {}
         for key in spec["equals"]:
             got = lookup(doc, key)

@@ -1,0 +1,41 @@
+"""qdlint: invariant-aware static analysis for the qd-tree stack.
+
+Stdlib-only on purpose — the CI lint job runs it with nothing
+installed beyond ruff (``PYTHONPATH=src python -m repro.analysis src``).
+See :mod:`repro.analysis.core` for the rule catalogue and annotation
+conventions.
+"""
+
+from repro.analysis.core import (
+    CHECKER_CODES,
+    EXCLUDED_FRAGMENTS,
+    FileResult,
+    Finding,
+    ModuleInfo,
+    Report,
+    analyze_file,
+    iter_python_files,
+    load_baseline,
+    parse_module,
+    run,
+    write_baseline,
+)
+from repro.analysis.cli import DEFAULT_BASELINE, main, self_test
+
+__all__ = [
+    "CHECKER_CODES",
+    "DEFAULT_BASELINE",
+    "EXCLUDED_FRAGMENTS",
+    "FileResult",
+    "Finding",
+    "ModuleInfo",
+    "Report",
+    "analyze_file",
+    "iter_python_files",
+    "load_baseline",
+    "main",
+    "parse_module",
+    "run",
+    "self_test",
+    "write_baseline",
+]

@@ -1,0 +1,25 @@
+"""qdlint fixture: QD001 must-not-flag — every access holds the lock."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0  # guarded by: self._lock
+        self._count += 1  # constructor is exempt: not yet shared
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def value(self):
+        with self._lock:
+            return self._count
+
+    def _bump_locked(self):  # qdlint: holds-lock
+        self._count += 1
+
+    def snapshot(self):
+        with self._lock:
+            return [self._count for _ in range(2)]

@@ -1,0 +1,15 @@
+"""qdlint fixture: QD001 true positive — guarded field touched unlocked."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0  # guarded by: self._lock
+
+    def bump(self):
+        self._count += 1
+
+    def value(self):
+        return self._count

@@ -1,0 +1,15 @@
+"""qdlint fixture: QD002 must-not-flag — sorted sets, sanctioned clocks."""
+# qdlint: deterministic-module
+
+import time
+
+import numpy as np
+
+
+def merge_keys(before, after):
+    out = [k for k in sorted(set(before) | set(after))]
+    elapsed = time.perf_counter()
+    rng = np.random.default_rng(7)
+    for name in {"a": 1, "b": 2}:  # plain dict order is deterministic
+        out.append(name)
+    return out, elapsed, rng

@@ -1,0 +1,9 @@
+"""qdlint fixture: QD002 true positive — unsorted set iteration."""
+# qdlint: deterministic-module
+
+
+def merge_keys(before, after):
+    out = []
+    for k in set(before) | set(after):
+        out.append(k)
+    return out

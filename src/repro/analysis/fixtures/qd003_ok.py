@@ -1,0 +1,22 @@
+"""qdlint fixture: QD003 must-not-flag — static branches, padded buckets."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def descend(records, depth):
+    if depth > 2:
+        return records * depth
+    return records
+
+
+def pad_bucket(n):
+    return max(1, int(n))
+
+
+def route_plan(PlanKey, sig, m):
+    m_bucket = pad_bucket(m)
+    padded = m_bucket + 0
+    return PlanKey(sig, "jax", padded, 0, 0, pad_bucket(8))

@@ -1,0 +1,16 @@
+"""qdlint fixture: QD003 true positives — traced branch, raw PlanKey."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def descend(records, depth):
+    if records.sum() > 0:
+        return records * depth
+    return records
+
+
+def route_plan(PlanKey, sig, m):
+    return PlanKey(sig, "jax", m, 0, 0, 0)

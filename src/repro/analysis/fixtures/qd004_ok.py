@@ -1,0 +1,12 @@
+"""qdlint fixture: QD004 must-not-flag — device-side hot path."""
+
+import jax.numpy as jnp
+
+
+def route(records):  # qdlint: hot-path
+    return jnp.asarray(records).sum()
+
+
+def summarize(records):
+    # not marked hot-path: host syncs are fine off the serving path
+    return float(records.sum()), records.item()

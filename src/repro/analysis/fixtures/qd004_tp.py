@@ -1,0 +1,9 @@
+"""qdlint fixture: QD004 true positives — host syncs on the hot path."""
+
+import numpy as np
+
+
+def route(records):  # qdlint: hot-path
+    total = float(records.sum())
+    host = np.asarray(records)
+    return total, host

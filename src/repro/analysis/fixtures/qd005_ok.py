@@ -1,0 +1,17 @@
+"""qdlint fixture: QD005 must-not-flag — locked swaps, lock-free reads."""
+
+import threading
+
+
+class Service:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._live = object()  # swap-guarded by: self._lock
+
+    def swap(self, version):
+        with self._lock:
+            self._live = version
+
+    def live(self):
+        # lock-free read is the point of the atomic-snapshot pattern
+        return self._live

@@ -1,0 +1,13 @@
+"""qdlint fixture: QD005 true positive — live pointer swapped unlocked."""
+
+import threading
+
+
+class Service:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._live = object()  # swap-guarded by: self._lock
+
+    def swap(self, version):
+        self._live = version
+        return self._live

@@ -1,0 +1,16 @@
+"""qdlint fixture: suppression with a reason silences the finding."""
+
+import threading
+
+
+class Gauge:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0  # guarded by: self._lock
+
+    def update(self, value):
+        with self._lock:
+            self._value = value
+
+    def peek(self):
+        return self._value  # qdlint: disable=QD001 racy read is fine for a monitoring gauge

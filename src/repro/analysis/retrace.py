@@ -1,0 +1,265 @@
+"""QD003/QD004: retrace hazards in jit bodies and host syncs in hot paths.
+
+QD003 has two legs:
+
+* **Branching on traced values.**  Inside a jit-compiled function,
+  ``if``/``while`` on a traced argument forces a concretization error
+  at best and a silent retrace-per-value at worst.  Checked bodies are
+  functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit,
+  static_argnames=...)``, plus pallas kernel bodies marked
+  ``# qdlint: jit-body`` on the ``def`` line (convention: positional
+  parameters are traced refs, keyword-only parameters are static —
+  exactly how the kernels in ``repro.kernels`` are closed over).
+  Branches on static parameters and on locals are allowed (locals are
+  under-approximated as safe; the repo idiom computes static shape
+  predicates into locals before branching).
+* **PlanKey buckets bypassing pad_bucket.**  The zero-warm-retraces
+  contract holds because every compiled-plan cache key quantizes its
+  shape coordinates (``m_bucket``/``node_bucket``/``leaf_bucket``/
+  ``cut_bucket``) through :func:`repro.engine.plan.pad_bucket`.  A
+  ``PlanKey(...)`` whose bucket argument is a raw value keys the cache
+  on exact shapes — one compile per batch size.  Accepted: integer
+  literals, expressions containing a ``pad_bucket`` call, and names
+  assigned (transitively) from such expressions within the function.
+
+QD004 flags host-synchronizing calls — ``float(x)``, ``x.item()``,
+``np.asarray`` / ``np.array`` / ``jax.device_get`` — inside functions
+whose ``def`` line is marked ``# qdlint: hot-path``.  Each one blocks
+on device completion and drags the result across the host boundary;
+hot paths must stay device-side (``jnp.asarray`` is fine).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.core import Finding, ModuleInfo
+
+_BUCKET_FIELDS = ("m_bucket", "node_bucket", "leaf_bucket", "cut_bucket")
+# PlanKey(sig, backend, m_bucket, node_bucket, leaf_bucket, cut_bucket, opts)
+_BUCKET_POSITIONS = {2: "m_bucket", 3: "node_bucket",
+                     4: "leaf_bucket", 5: "cut_bucket"}
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('' when not a name)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _static_names_from_kwargs(
+    keywords: list[ast.keyword], fn
+) -> set[str]:
+    statics: set[str] = set()
+    params = [a.arg for a in fn.args.args]
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(
+                    e.value, str
+                ):
+                    statics.add(e.value)
+        elif kw.arg == "static_argnums":
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(
+                    e.value, int
+                ) and 0 <= e.value < len(params):
+                    statics.add(params[e.value])
+    return statics
+
+
+def _jit_traced_params(info: ModuleInfo, fn) -> Optional[set[str]]:
+    """Traced parameter names if ``fn`` is a jit body, else None."""
+    statics: Optional[set[str]] = None
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):
+            statics = set()
+            break
+        if isinstance(dec, ast.Call):
+            callee = _dotted(dec.func)
+            if callee in ("functools.partial", "partial") and dec.args \
+                    and _is_jax_jit(dec.args[0]):
+                statics = _static_names_from_kwargs(dec.keywords, fn)
+                break
+            if _is_jax_jit(dec.func):
+                statics = _static_names_from_kwargs(dec.keywords, fn)
+                break
+    if statics is None:
+        if "jit-body" in info.markers_on(fn.lineno):
+            # kernel convention: positional refs traced, kwonly static
+            return {a.arg for a in fn.args.args}
+        return None
+    params = {a.arg for a in fn.args.args}
+    params |= {a.arg for a in fn.args.kwonlyargs}
+    return params - statics
+
+
+class _NameFinder(ast.NodeVisitor):
+    def __init__(self):
+        self.names: set[str] = set()
+        self.calls: set[str] = set()
+
+    def visit_Name(self, node: ast.Name) -> None:
+        self.names.add(node.id)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if dotted:
+            self.calls.add(dotted)
+        self.generic_visit(node)
+
+
+def _expr_names(node: ast.AST) -> tuple[set[str], set[str]]:
+    finder = _NameFinder()
+    finder.visit(node)
+    return finder.names, finder.calls
+
+
+def _has_pad_bucket_call(calls: set[str]) -> bool:
+    return any(
+        c == "pad_bucket" or c.endswith(".pad_bucket") for c in calls
+    )
+
+
+def _pad_derived_names(fn) -> set[str]:
+    """Names assigned (transitively) from pad_bucket expressions."""
+    assigns: list[tuple[str, ast.AST]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            assigns.append((node.targets[0].id, node.value))
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+            node.target, ast.Name
+        ) and node.value is not None:
+            assigns.append((node.target.id, node.value))
+    derived: set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for name, value in assigns:
+            if name in derived:
+                continue
+            names, calls = _expr_names(value)
+            if _has_pad_bucket_call(calls) or (names & derived):
+                derived.add(name)
+                changed = True
+    return derived
+
+
+def _bucket_arg_ok(node: ast.AST, derived: set[str]) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return True
+    names, calls = _expr_names(node)
+    return _has_pad_bucket_call(calls) or bool(names & derived)
+
+
+def check_retrace(info: ModuleInfo) -> list[Finding]:
+    findings: list[Finding] = []
+
+    def flag(code: str, node: ast.AST, symbol: str, message: str):
+        findings.append(
+            Finding(
+                code=code,
+                path=info.rel,
+                line=node.lineno,
+                col=node.col_offset,
+                symbol=symbol,
+                message=message,
+            )
+        )
+
+    for fn in [
+        n for n in ast.walk(info.tree) if isinstance(n, _FUNC_NODES)
+    ]:
+        # QD003a: Python branches on traced values inside jit bodies
+        traced = _jit_traced_params(info, fn)
+        if traced:
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.If, ast.While)):
+                    names, _ = _expr_names(node.test)
+                    hot = sorted(names & traced)
+                    if hot:
+                        flag(
+                            "QD003", node, fn.name,
+                            "Python-level branch on traced value(s) "
+                            f"{', '.join(hot)} inside a jit body — "
+                            "hoist to a static argument or use "
+                            "jnp.where/lax.cond",
+                        )
+
+        # QD003b: PlanKey buckets must flow through pad_bucket
+        derived: Optional[set[str]] = None
+        for node in ast.walk(fn):
+            if not (
+                isinstance(node, ast.Call)
+                and _dotted(node.func).split(".")[-1] == "PlanKey"
+            ):
+                continue
+            if derived is None:
+                derived = _pad_derived_names(fn)
+            suspects: list[tuple[str, ast.AST]] = []
+            for pos, name in _BUCKET_POSITIONS.items():
+                if pos < len(node.args):
+                    suspects.append((name, node.args[pos]))
+            for kw in node.keywords:
+                if kw.arg in _BUCKET_FIELDS:
+                    suspects.append((kw.arg, kw.value))
+            for name, arg in suspects:
+                if not _bucket_arg_ok(arg, derived):
+                    flag(
+                        "QD003", arg, fn.name,
+                        f"PlanKey {name} not derived from pad_bucket — "
+                        "raw shapes defeat the padding-bucket plan "
+                        "cache (one retrace per distinct size)",
+                    )
+
+        # QD004: host syncs inside hot-path functions
+        if "hot-path" not in info.markers_on(fn.lineno):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Name) and func.id == "float" \
+                    and len(node.args) == 1:
+                flag(
+                    "QD004", node, fn.name,
+                    "float(...) in a hot-path function forces a host "
+                    "sync on device arrays",
+                )
+            elif isinstance(func, ast.Attribute):
+                if func.attr == "item" and not node.args:
+                    flag(
+                        "QD004", node, fn.name,
+                        ".item() in a hot-path function forces a host "
+                        "sync",
+                    )
+                else:
+                    dotted = _dotted(func)
+                    if dotted in (
+                        "np.asarray", "numpy.asarray",
+                        "np.array", "numpy.array",
+                        "jax.device_get",
+                    ):
+                        flag(
+                            "QD004", node, fn.name,
+                            f"{dotted}(...) in a hot-path function "
+                            "pulls device arrays to host",
+                        )
+    return findings

@@ -16,6 +16,8 @@ assignment, giving us:
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import dataclasses
 import threading
 from collections import deque
@@ -52,13 +54,13 @@ class ElasticBlockScheduler:
         self._all = list(block_ids)
         self._seed = seed
         self._lock = threading.Lock()
-        self._epoch = -1
-        self._pending: deque[int] = deque()
-        self._inflight: dict[int, set[int]] = {}
-        self._done: set[int] = set()
+        self._epoch = -1  # guarded by: self._lock
+        self._pending: deque[int] = deque()  # guarded by: self._lock
+        self._inflight: dict[int, set[int]] = {}  # guarded by: self._lock
+        self._done: set[int] = set()  # guarded by: self._lock
         self._start_epoch(0)
 
-    def _start_epoch(self, epoch: int) -> None:
+    def _start_epoch(self, epoch: int) -> None:  # qdlint: holds-lock
         rng = np.random.default_rng(self._seed + epoch)
         order = np.array(self._all)
         rng.shuffle(order)
@@ -69,7 +71,8 @@ class ElasticBlockScheduler:
 
     @property
     def epoch(self) -> int:
-        return self._epoch
+        with self._lock:
+            return self._epoch
 
     def next_block(self, worker: int) -> Optional[int]:
         """Pull the next block for ``worker``; None ⇒ epoch exhausted."""

@@ -15,6 +15,8 @@ compilations (zero retracing — asserted via ``plan.trace_counts``).
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import functools
 
 import jax

@@ -19,6 +19,8 @@ plan-cache and trace counters).
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import collections
 import dataclasses
 import threading
@@ -168,7 +170,7 @@ class LayoutEngine:
         return {} if self.interpret is None else {"interpret": self.interpret}
 
     # -- routing ------------------------------------------------------------
-    def route(
+    def route(  # qdlint: hot-path
         self, records: np.ndarray, backend: Optional[str] = None, **opts
     ) -> np.ndarray:
         """Record batch → (m,) int32 BIDs (paper Sec 3.1)."""
@@ -195,7 +197,7 @@ class LayoutEngine:
                 self._wt_cache.popitem(last=False)  # evict LRU entry
         return wt
 
-    def query_hits(
+    def query_hits(  # qdlint: hot-path
         self,
         workload: qry.Workload | qry.WorkloadTensors,
         backend: Optional[str] = None,
@@ -212,7 +214,7 @@ class LayoutEngine:
             self.tree, self.plans, wt, **kw
         )
 
-    def route_queries(
+    def route_queries(  # qdlint: hot-path
         self,
         workload: qry.Workload | qry.WorkloadTensors,
         backend: Optional[str] = None,
@@ -291,7 +293,7 @@ class LayoutEngine:
         )
 
     # -- streaming ingestion -------------------------------------------------
-    def fused_step(
+    def fused_step(  # qdlint: hot-path
         self, records: np.ndarray, backend: Optional[str] = None, **opts
     ):
         """One single-pass route + tighten step (no tree mutation).

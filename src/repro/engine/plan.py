@@ -21,6 +21,8 @@ performs zero recompilation.
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import dataclasses
 import hashlib
 import itertools
@@ -35,7 +37,7 @@ from repro.core.qdtree import FrozenQdTree
 
 LANE = 128  # TPU lane width; leaf/cut buckets must be multiples of this
 
-_SIG_COUNTER = itertools.count()
+_SIG_COUNTER = itertools.count()  # guarded by: _SIG_LOCK
 _SIG_LOCK = threading.Lock()
 
 TRACE_COUNTS: Counter = Counter()
@@ -54,7 +56,7 @@ def trace_delta(before: dict[str, int], after: dict[str, int]) -> dict:
     """Counters that moved between two ``trace_counts`` snapshots."""
     return {
         k: after.get(k, 0) - before.get(k, 0)
-        for k in set(before) | set(after)
+        for k in sorted(set(before) | set(after))
         if after.get(k, 0) != before.get(k, 0)
     }
 
@@ -144,10 +146,10 @@ class PlanCache:
     """Keyed plan store with hit/miss accounting (thread-safe)."""
 
     def __init__(self):
-        self._plans: dict[Any, Any] = {}
+        self._plans: dict[Any, Any] = {}  # guarded by: self._lock
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
+        self.hits = 0  # guarded by: self._lock
+        self.misses = 0  # guarded by: self._lock
 
     def get(self, key: Any, builder: Callable[[], Any]) -> Any:
         with self._lock:
@@ -162,7 +164,8 @@ class PlanCache:
             return self._plans[key]
 
     def __len__(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)
 
     def evict(self, predicate: Callable[[Any], bool]) -> int:
         """Drop every entry whose key satisfies ``predicate``."""
@@ -173,7 +176,13 @@ class PlanCache:
             return len(stale)
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses, "size": len(self)}
+        # len(self._plans) inlined: __len__ takes this same non-reentrant lock
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "size": len(self._plans),
+            }
 
 
 # ---------------------------------------------------------------------------

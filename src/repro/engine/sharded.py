@@ -34,6 +34,8 @@ two-pass loop, each record touched once.
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import atexit
 import contextlib
 import dataclasses
@@ -383,8 +385,8 @@ def _run_shard(ingestor: ShardIngestor, batches) -> ShardState:
 # largest shard count requested, and lives until ``shutdown_process_pool``
 # or interpreter exit.
 _pool_lock = threading.Lock()
-_pool: Optional[ProcessPoolExecutor] = None
-_pool_workers = 0
+_pool: Optional[ProcessPoolExecutor] = None  # guarded by: _pool_lock
+_pool_workers = 0  # guarded by: _pool_lock
 
 
 def process_pool(min_workers: int = 1) -> ProcessPoolExecutor:
@@ -450,7 +452,7 @@ def _process_shard_worker(
             warm_sizes(part.shape[0], 1, batch), backend=backend
         )
     else:
-        for s in warm_sizes(part.shape[0], 1, batch):
+        for s in sorted(warm_sizes(part.shape[0], 1, batch)):
             engine.route(
                 np.zeros((s, tree.leaf_lo.shape[1]), np.int32),
                 backend=backend,

@@ -32,6 +32,8 @@ numpy tightener bit-for-bit.
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import functools
 
 import jax
@@ -43,7 +45,7 @@ from jax.experimental.pallas import tpu as pltpu
 BIG = float(2**25)
 
 
-def _fused_ingest_kernel(
+def _fused_ingest_kernel(  # qdlint: jit-body
     # inputs (VMEM refs)
     records_ref,  # (TM, D) f32 — record tile (dictionary codes)
     valid_ref,  # (TM, 1) f32 — 1.0 real record, 0.0 padding row

@@ -16,6 +16,8 @@ Grid = (n_conj_tiles, n_leaf_tiles) with the *leaf* axis innermost so the
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import functools
 
 import jax
@@ -23,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _intersect_kernel(
+def _intersect_kernel(  # qdlint: jit-body
     leaf_lo_ref,  # (TL, D) f32
     leaf_hi_ref,  # (TL, D) f32
     leaf_cat_ref,  # (TL, B) f32

@@ -23,6 +23,8 @@ float32 MXU arithmetic is exact.
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import functools
 
 import jax
@@ -33,7 +35,7 @@ from jax.experimental import pallas as pl
 # ---------------------------------------------------------------------------
 # Kernel 1: predicate-matrix evaluation
 # ---------------------------------------------------------------------------
-def _eval_cuts_kernel(
+def _eval_cuts_kernel(  # qdlint: jit-body
     # inputs (VMEM refs)
     records_ref,  # (TM, D) f32 — record tile (dictionary codes)
     dim_onehot_ref,  # (D, C) f32 — one-hot of each cut's column
@@ -165,7 +167,7 @@ def eval_cuts_pallas(
 # ---------------------------------------------------------------------------
 # Kernel 2: path-constraint leaf location
 # ---------------------------------------------------------------------------
-def _locate_leaf_kernel(
+def _locate_leaf_kernel(  # qdlint: jit-body
     m_ref,  # (TM, C) f32 — predicate-matrix tile
     pathpos_ref,  # (C, TL) f32 — 1 iff leaf's path requires cut true
     pathneg_ref,  # (C, TL) f32 — 1 iff leaf's path requires cut false

@@ -35,6 +35,8 @@ layout):
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import dataclasses
 import threading
 from collections import OrderedDict
@@ -124,18 +126,20 @@ class ResultCache:
         self.capacity = int(capacity)
         self.stats = CacheStats()
         self._lock = threading.Lock()
-        self._entries: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._entries: OrderedDict[tuple, np.ndarray] = OrderedDict()  # guarded by: self._lock
         # one activated epoch per replica_id; pre-replica callers only
         # ever populate slot 0
-        self._epochs: dict[int, Epoch] = {}
+        self._epochs: dict[int, Epoch] = {}  # guarded by: self._lock
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     @property
     def epoch(self) -> Optional[Epoch]:
         """The primary replica's activated epoch (compat surface)."""
-        return self._epochs.get(0)
+        with self._lock:
+            return self._epochs.get(0)
 
     def epochs(self) -> tuple[Epoch, ...]:
         """Every activated epoch, replica order."""

@@ -216,9 +216,9 @@ class RequestQueue:
         self.stats = AdmissionStats()
         self._lock = threading.Lock()
         self._nonempty = threading.Condition(self._lock)
-        self._pending: deque[QueryTicket] = deque()
-        self._inflight: dict[str, int] = {}
-        self._closed = False
+        self._pending: deque[QueryTicket] = deque()  # guarded by: self._lock
+        self._inflight: dict[str, int] = {}  # guarded by: self._lock
+        self._closed = False  # guarded by: self._lock
 
     def __len__(self) -> int:
         with self._lock:

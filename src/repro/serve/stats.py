@@ -20,7 +20,7 @@ class LatencyRecorder:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._samples: list[float] = []
+        self._samples: list[float] = []  # guarded by: self._lock
 
     def record(self, latency_s: float) -> None:
         with self._lock:

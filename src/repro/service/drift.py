@@ -230,17 +230,19 @@ class RecordReservoir:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
         self._lock = threading.Lock()
-        self._buf: Optional[np.ndarray] = None
-        self._write = 0  # next write position
-        self._size = 0
-        self._seen = 0
+        self._buf: Optional[np.ndarray] = None  # guarded by: self._lock
+        self._write = 0  # guarded by: self._lock -- next write position
+        self._size = 0  # guarded by: self._lock
+        self._seen = 0  # guarded by: self._lock
 
     def __len__(self) -> int:
-        return self._size
+        with self._lock:
+            return self._size
 
     @property
     def records_seen(self) -> int:
-        return self._seen
+        with self._lock:
+            return self._seen
 
     def add(self, records: np.ndarray) -> None:
         if records.shape[0] == 0:
@@ -343,9 +345,9 @@ class AutoRebuilder:
                 )
             if tracker is None:
                 tracker = service.workload_tracker()
-        self.workload = workload
-        self.tracker = tracker
-        self.monitor = DriftMonitor(config)
+        self.workload = workload  # guarded by: self._lock
+        self.tracker = tracker  # guarded by: self._lock
+        self.monitor = DriftMonitor(config)  # guarded by: self._lock
         self.reservoir = (
             reservoir
             if reservoir is not None
@@ -357,7 +359,7 @@ class AutoRebuilder:
         self.on_event = on_event
         self.events: list[RebuildEvent] = []
         self._lock = threading.Lock()
-        self._inflight: Optional[threading.Event] = None
+        self._inflight: Optional[threading.Event] = None  # guarded by: self._lock
         self._executor = executor
         self._own_executor: Optional[ThreadPoolExecutor] = None
 
@@ -488,16 +490,18 @@ class AutoRebuilder:
             if policy is not None and policy.replicas > 1:
                 # replica policy: the triggered rebuild deploys a whole
                 # k-replica set clustered from the tracked mix
+                with self._lock:
+                    tracker = (
+                        self.tracker
+                        if isinstance(self.workload, str)
+                        else None
+                    )
                 report = self.service.rebuild_replicas(
                     records,
                     workload=workload,
                     k=policy.replicas,
                     lam=policy.lam,
-                    tracker=(
-                        self.tracker
-                        if isinstance(self.workload, str)
-                        else None
-                    ),
+                    tracker=tracker,
                     **self.rebuild_kw,
                 )
             else:

@@ -32,6 +32,8 @@ entries).
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import dataclasses
 from collections import Counter
 from typing import Optional, Sequence
@@ -101,7 +103,7 @@ def signature_features(sig: tuple, schema: Schema) -> np.ndarray:
                 hit[d] = 1.0
                 center_sum[d] += 0.5
                 center_n[d] += 1.0
-        for d in set(lo) | set(hi):
+        for d in sorted(set(lo) | set(hi)):
             a = lo.get(d, 0)
             b = hi.get(d, int(doms[d]))
             center_sum[d] += (a + b) / (2.0 * max(int(doms[d]), 1))

@@ -24,6 +24,9 @@ loop of Lachesis (arXiv:2006.16529).
 
 from __future__ import annotations
 
+# qdlint: deterministic-module (timings use perf_counter and are
+# reported, never folded into layouts or plan keys)
+
 import dataclasses
 import threading
 import time
@@ -116,11 +119,11 @@ class LayoutService:
         # an equal cut table keeps standing workloads tensorized
         self._wt_cache = WorkloadTensorCache()
         self._lock = threading.Lock()
-        self._gen = 0
-        self._versions: dict[int, LayoutVersion] = {}
-        self._swap_listeners: list[Callable[[LayoutVersion], None]] = []
-        self._live = self._new_version(layout)
-        self._rset = ReplicaSet(
+        self._gen = 0  # guarded by: self._lock
+        self._versions: dict[int, LayoutVersion] = {}  # guarded by: self._lock
+        self._swap_listeners: list[Callable[[LayoutVersion], None]] = []  # guarded by: self._lock
+        self._live = self._new_version(layout)  # swap-guarded by: self._lock
+        self._rset = ReplicaSet(  # swap-guarded by: self._lock
             (self._live,),
             (block_sizes_for(self._live.build, self._live.tree.n_leaves),),
         )
@@ -141,7 +144,7 @@ class LayoutService:
             backend=backend,
         )
 
-    def _new_version(
+    def _new_version(  # qdlint: holds-lock
         self,
         build: LayoutBuild,
         replica_id: int = 0,
@@ -221,10 +224,12 @@ class LayoutService:
 
     def versions(self) -> tuple[int, ...]:
         """Retained generations, oldest first."""
-        return tuple(sorted(self._versions))
+        with self._lock:
+            return tuple(sorted(self._versions))
 
     def version(self, generation: int) -> LayoutVersion:
-        return self._versions[generation]
+        with self._lock:
+            return self._versions[generation]
 
     def stats(self) -> dict:
         return {
@@ -537,7 +542,7 @@ class LayoutService:
         self._notify_swap(v)
         return generation
 
-    def _replica_holders(self) -> str:
+    def _replica_holders(self) -> str:  # qdlint: holds-lock
         """``" (held by replica r0: 1, 2)"``-style suffix naming which
         replica slot each retained generation belongs to."""
         by_rid: dict[int, list[int]] = {}

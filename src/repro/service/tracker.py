@@ -37,6 +37,8 @@ rebuilds against the *inferred* mix (re-inferred at trigger time).  See
 
 from __future__ import annotations
 
+# qdlint: deterministic-module
+
 import ast
 import dataclasses
 import threading
@@ -671,20 +673,22 @@ class WorkloadTracker:
     ):
         self.schema = schema
         self.config = config or TrackerConfig()
-        self.state = (
+        self.state = (  # guarded by: self._lock
             state if state is not None else TrackerState.fresh(self.config)
         )
         self._lock = threading.Lock()
-        self._version = 0
-        self._infer_cache: Optional[tuple] = None  # (ver, k, budget, wl)
+        self._version = 0  # guarded by: self._lock
+        self._infer_cache: Optional[tuple] = None  # guarded by: self._lock
 
     @property
     def version(self) -> int:
-        return self._version
+        with self._lock:
+            return self._version
 
     @property
     def queries_seen(self) -> int:
-        return self.state.queries_seen
+        with self._lock:
+            return self.state.queries_seen
 
     # -- recording (the route_queries/route_query hook) ----------------------
     def record(

@@ -1,0 +1,116 @@
+"""Subprocess probe: digest every merge/signature path that must be
+hash-seed independent.
+
+Run with different ``PYTHONHASHSEED`` values (tests/test_hash_determinism
+drives it); the printed sha256 must be identical across seeds — str-keyed
+set/dict iteration order is exactly what hash randomization perturbs, and
+these outputs cross process boundaries in the spawn-worker fleet, where
+every worker gets its own seed.
+"""
+
+import hashlib
+
+import numpy as np
+
+
+def main() -> None:
+    h = hashlib.sha256()
+
+    # 1. trace_delta: str-keyed counter diff (the fixed set-union hazard)
+    from repro.engine.plan import trace_delta
+
+    before = {f"counter_{i}": i for i in range(20)}
+    after = {f"counter_{i}": i * 2 for i in range(5, 25)}
+    h.update(repr(trace_delta(before, after)).encode())
+
+    # 2. k-way TrackerState merge + inference
+    from repro.core import query as qry
+    from repro.core.predicates import OP_GE, OP_LT, Column, Schema
+    from repro.core.query import InAtom, Query, RangeAtom
+    from repro.service.tracker import (
+        TrackerConfig,
+        WorkloadTracker,
+        merge_states,
+        query_signatures,
+    )
+
+    schema = Schema((
+        Column("a", "numeric", 1000),
+        Column("b", "numeric", 1000),
+        Column("c", "categorical", 6),
+    ))
+
+    def workload(seed: int) -> qry.Workload:
+        rng = np.random.default_rng(seed)
+        queries = []
+        for _ in range(6):
+            d = int(rng.integers(0, 2))
+            lo = int(rng.integers(0, 900))
+            atoms = [RangeAtom(d, OP_GE, lo), RangeAtom(d, OP_LT, lo + 50)]
+            if rng.random() < 0.5:
+                vals = rng.choice(6, size=2, replace=False)
+                atoms.append(InAtom(2, tuple(int(v) for v in sorted(vals))))
+            queries.append(Query.conjunction(atoms))
+        return qry.Workload(schema, tuple(queries))
+
+    cfg = TrackerConfig(n_buckets=64, n_gens=8, decay=0.5)
+    trackers = [WorkloadTracker(schema, cfg) for _ in range(4)]
+    for i, tracker in enumerate(trackers):
+        tracker.record(workload(100 + i))
+        tracker.tick()
+        tracker.record(workload(200 + i))
+    merged = merge_states([t.snapshot() for t in trackers])
+    tops = merged.top_signatures(16)
+    h.update(repr(tops).encode())
+    inferred = merged.infer_workload(schema, top_k=8, budget=16)
+    h.update(repr(query_signatures(inferred, 64)).encode())
+
+    # 3. replica signature features over the merged top signatures
+    from repro.service.replica import signature_features
+
+    for sig, weight in tops:
+        feats = signature_features(sig, schema)
+        h.update(np.ascontiguousarray(feats).tobytes())
+        h.update(repr(float(weight)).encode())
+
+    # 4. k-way ShardState merge (synthetic but exactly typed aggregates)
+    from repro.engine.sharded import ShardState
+
+    def shard(i: int) -> ShardState:
+        rng = np.random.default_rng(1000 + i)
+        L, D, B, A = 8, 2, 4, 1
+        return ShardState(
+            shard_ids=(i,),
+            n_leaves=L,
+            counts=rng.integers(0, 100, L).astype(np.int64),
+            lo=rng.integers(-50, 0, (L, D)).astype(np.int64),
+            hi=rng.integers(1, 50, (L, D)).astype(np.int64),
+            cat=rng.integers(0, 2, (L, B)).astype(bool),
+            adv=rng.integers(0, 2, (L, A, 2)).astype(bool),
+            n_batches=2,
+            n_records=int(rng.integers(10, 50)),
+            chunks={
+                int(b): [(i, rng.integers(0, 9, (3, D)).astype(np.int32))]
+                for b in range(i % 3 + 1)
+            },
+            wall_s=0.0,
+        )
+
+    folded = shard(0)
+    for i in (1, 2, 3):
+        folded = folded.merge(shard(i))
+    h.update(repr(folded.shard_ids).encode())
+    for arr in (folded.counts, folded.lo, folded.hi, folded.cat,
+                folded.adv):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    h.update(repr((folded.n_batches, folded.n_records)).encode())
+    for bid in sorted(folded.chunks):
+        for sid, rows in folded.chunks[bid]:
+            h.update(repr((bid, sid)).encode())
+            h.update(np.ascontiguousarray(rows).tobytes())
+
+    print(h.hexdigest())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""qdlint tests: per-checker fixture corpus (one true-positive and one
+must-not-flag case per rule), suppression semantics, baseline round-trip,
+fingerprint stability, the CLI self-test, and the repo-wide acceptance
+pin (src/ is qdlint-clean)."""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis import (
+    CHECKER_CODES,
+    DEFAULT_BASELINE,
+    analyze_file,
+    load_baseline,
+    main,
+    parse_module,
+    run,
+    self_test,
+    write_baseline,
+)
+from repro.analysis.core import Finding
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "src" / "repro" / "analysis" / "fixtures"
+
+
+# ---------------------------------------------------------------------------
+# Per-checker fixtures: each rule fires on its true positive and stays
+# silent on the idiomatic twin.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("code", CHECKER_CODES)
+def test_checker_fires_on_true_positive(code):
+    result = analyze_file(FIXTURES / f"{code.lower()}_tp.py")
+    assert result.findings, f"{code} fixture produced no findings"
+    assert {f.code for f in result.findings} == {code}
+    for f in result.findings:
+        assert f.line > 0 and f.message
+
+
+@pytest.mark.parametrize("code", CHECKER_CODES)
+def test_checker_silent_on_idiomatic_code(code):
+    result = analyze_file(FIXTURES / f"{code.lower()}_ok.py")
+    assert result.findings == [], [
+        f.render() for f in result.findings
+    ]
+
+
+def test_lock_discipline_details():
+    result = analyze_file(FIXTURES / "qd001_tp.py")
+    # both the unlocked write (bump) and the unlocked read (value) flag
+    symbols = {f.symbol for f in result.findings}
+    assert symbols == {"Counter.bump", "Counter.value"}
+
+
+def test_swap_guard_allows_lockfree_reads():
+    tp = analyze_file(FIXTURES / "qd005_tp.py")
+    # exactly the unlocked *write* fires; the lock-free read on the next
+    # line is the sanctioned atomic-snapshot pattern
+    assert len(tp.findings) == 1
+    assert "assigned without holding" in tp.findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+def test_suppression_with_reason_silences_and_is_reported():
+    result = analyze_file(FIXTURES / "suppress_ok.py")
+    assert result.findings == []
+    assert len(result.suppressed) == 1
+    assert result.suppressed[0].code == "QD001"
+
+
+def test_suppression_without_reason_is_inert():
+    result = analyze_file(FIXTURES / "suppress_noreason.py")
+    assert [f.code for f in result.findings] == ["QD001"]
+    assert result.suppressed == []
+
+
+# ---------------------------------------------------------------------------
+# Annotation parsing
+# ---------------------------------------------------------------------------
+def test_guard_annotation_accepts_trailing_prose(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(
+        "import threading\n\n\n"
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self._x = 0  # guarded by: self._lock -- ring head\n\n"
+        "    def peek(self):\n"
+        "        return self._x\n"
+    )
+    info = parse_module(mod)
+    (locks, kind), = (info.guards[v] for v in (7,))
+    assert locks == ("self._lock",) and kind == "guard"
+    result = analyze_file(mod)
+    assert [f.code for f in result.findings] == ["QD001"]
+
+
+def test_constructor_and_holds_lock_are_exempt(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(
+        "import threading\n\n\n"
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self._x = 0  # guarded by: self._lock\n"
+        "        self._x += 1\n\n"
+        "    def _bump(self):  # qdlint: holds-lock\n"
+        "        self._x += 1\n"
+    )
+    assert analyze_file(mod).findings == []
+
+
+# ---------------------------------------------------------------------------
+# Baseline round-trip and fingerprints
+# ---------------------------------------------------------------------------
+def test_baseline_round_trip(tmp_path):
+    target = FIXTURES / "qd001_tp.py"
+    fresh = run([target])
+    assert fresh.findings and not fresh.baselined
+    baseline = tmp_path / "baseline.json"
+    write_baseline(fresh.findings, baseline)
+    doc = json.loads(baseline.read_text())
+    assert doc["version"] == 1 and len(doc["findings"]) == len(
+        fresh.findings
+    )
+    absorbed = run([target], baseline=baseline)
+    assert absorbed.findings == []
+    assert len(absorbed.baselined) == len(fresh.findings)
+    # each fingerprint absorbs exactly one occurrence
+    assert sum(load_baseline(baseline).values()) == len(fresh.findings)
+
+
+def test_fingerprint_is_line_number_free():
+    a = Finding("QD001", "p.py", 10, 0, "C.m", "msg")
+    b = Finding("QD001", "p.py", 99, 4, "C.m", "msg")
+    assert a.fingerprint() == b.fingerprint()
+    c = Finding("QD002", "p.py", 10, 0, "C.m", "msg")
+    assert c.fingerprint() != a.fingerprint()
+
+
+def test_missing_baseline_is_empty():
+    assert load_baseline(FIXTURES / "no_such_baseline.json") == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI and meta
+# ---------------------------------------------------------------------------
+def test_self_test_passes():
+    assert self_test(verbose=False)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert main([str(FIXTURES / "qd001_ok.py")]) == 0
+    assert main([str(FIXTURES / "qd001_tp.py")]) == 1
+    assert main(["--self-test"]) == 0
+    assert main([str(tmp_path / "nope")]) == 2
+    report = tmp_path / "report.json"
+    code = main([
+        str(FIXTURES / "qd002_tp.py"), "--format", "json",
+        "--output", str(report),
+    ])
+    assert code == 1
+    doc = json.loads(report.read_text())
+    assert doc["counts"]["QD002"] == len(doc["findings"]) >= 1
+    capsys.readouterr()
+
+
+def test_repo_sources_are_qdlint_clean():
+    """The acceptance pin: src/ has zero non-baselined findings."""
+    report = run([REPO / "src"], baseline=REPO / DEFAULT_BASELINE)
+    assert report.findings == [], "\n".join(
+        f.render() for f in report.findings
+    )
+    assert report.files > 50  # the scan actually covered the tree

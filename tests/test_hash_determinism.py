@@ -1,0 +1,49 @@
+"""Hash-randomization regression gate (qdlint QD002's dynamic twin).
+
+The spawn-worker fleet gives every process its own ``PYTHONHASHSEED``;
+any merge or signature path that iterates a str-keyed set/dict in hash
+order would produce different bytes per worker and break the
+bit-identical fold contract.  This runs tests/_hash_seed_probe.py —
+k-way ShardState and TrackerState merges, replica ``signature_features``
+and ``trace_delta`` — in subprocesses under different seeds and asserts
+the digests match exactly.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+PROBE = pathlib.Path(__file__).resolve().parent / "_hash_seed_probe.py"
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _probe_digest(seed: int) -> str:
+    env = dict(os.environ)
+    src = str(REPO / "src")
+    existing = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = (
+        src + os.pathsep + existing if existing else src
+    )
+    env["PYTHONHASHSEED"] = str(seed)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, str(PROBE)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=300,
+    )
+    assert proc.returncode == 0, (
+        f"probe failed under PYTHONHASHSEED={seed}:\n{proc.stderr}"
+    )
+    digest = proc.stdout.strip().splitlines()[-1]
+    assert len(digest) == 64, digest
+    return digest
+
+
+def test_merges_are_hash_seed_independent():
+    digests = {seed: _probe_digest(seed) for seed in (0, 1, 2)}
+    assert len(set(digests.values())) == 1, (
+        f"merge/signature outputs vary with PYTHONHASHSEED: {digests}"
+    )
