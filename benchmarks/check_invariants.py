@@ -179,6 +179,24 @@ SPEC: dict[str, dict[str, list[str]]] = {
             "assertions.zero_stale_responses",
         ],
     },
+    "BENCH_coordinator_smoke.json": {
+        # timings (walls, speedups) are never pinned — the wall-clock
+        # gate is hardware-aware and smoke mode skips it entirely; the
+        # pinned subset is the fold protocol's deterministic outcome
+        "equals": [
+            "n_records",
+            "n_blocks",
+            "shards.2.folds",
+            "shards.2.stale_dropped",
+            "shards.2.bit_identical",
+        ],
+        "true": [
+            "assertions.bit_identical_all_k",
+            "assertions.coordinator_owns_publish",
+            "assertions.fold_order_invariant",
+            "assertions.tracker_sketch_invariant",
+        ],
+    },
     "BENCH_serving_smoke.json": {
         # phase 1 runs sync serve_batch rounds on the calling thread, so
         # every cache/dispatch counter is exactly reproducible; phase 2

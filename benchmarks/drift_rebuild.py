@@ -29,6 +29,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import warnings
 
 import numpy as np
 
@@ -190,10 +191,15 @@ def run(smoke: bool = False, backend: str = "jax", seed: int = 0) -> dict:
     )
     sharded_identical = {}
     for k in SHARD_COUNTS:
-        repk = sharded_ingest(
-            LayoutEngine(replicate_tree(base), backend=backend),
-            phase_b, k, batch=batch, observe=probe_work,
-        )
+        with warnings.catch_warnings():
+            # determinism check, not a throughput claim: in-process
+            # threads keep it cheap, so mute the GIL PerformanceWarning
+            warnings.simplefilter("ignore")
+            repk = sharded_ingest(
+                LayoutEngine(replicate_tree(base), backend=backend),
+                phase_b, k, batch=batch, observe=probe_work,
+                executor="thread",
+            )
         sharded_identical[k] = repk.observation == rep1.observation
         print(
             f"[drift_rebuild] k={k}: window-stat {repk.observation} "

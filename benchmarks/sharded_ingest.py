@@ -28,12 +28,13 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import warnings
 
 import numpy as np
 
 from benchmarks import common
 from repro.engine import LayoutEngine, replicate_tree, sharded_ingest
-from repro.engine.sharded import micro_batches, warm_sizes
+from repro.engine.sharded import PerformanceWarning, micro_batches, warm_sizes
 from repro.service import build_layout
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / (
@@ -109,7 +110,12 @@ def run(scale: float = 0.5, seed: int = 0, smoke: bool = False,
         replica = replicate_tree(base)
         eng = LayoutEngine(replica, backend=backend)
         _warm_buckets(eng, records, batch, k)
-        rep = sharded_ingest(eng, records, k, batch=batch)
+        with warnings.catch_warnings():
+            # the thread column deliberately measures the GIL-bound path
+            # the PerformanceWarning exists to steer callers away from
+            warnings.simplefilter("ignore", PerformanceWarning)
+            rep = sharded_ingest(eng, records, k, batch=batch,
+                                 executor="thread")
         ok = _check_identical(rep, replica, k, "thread")
         identical[k] = ok
         zero_retrace[k] = not rep.traces

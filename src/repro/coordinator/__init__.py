@@ -1,0 +1,5 @@
+"""Fleet coordination: fold worker partials, drive the layout epoch."""
+
+from repro.coordinator.fleet import FleetCoordinator, FoldReport, WorkerHandle
+
+__all__ = ["FleetCoordinator", "FoldReport", "WorkerHandle"]

@@ -91,6 +91,7 @@ class Backend:
         tree: FrozenQdTree,
         cache: PlanCache,
         records: np.ndarray,
+        return_bids: bool = True,
         **opts,
     ):
         """One single-pass route + tighten step.
@@ -100,13 +101,19 @@ class Backend:
         followed by ``IncrementalTightener.update``.  The base
         implementation is the legacy two-pass fallback, so every backend
         has a fused entry point even before it grows a fused kernel.
+
+        ``return_bids=False`` lets a caller that only folds partials
+        (shard workers streaming aggregates, tighten-only ingest) skip
+        the per-row block-id device→host transfer — the largest host
+        sync of the warm loop; the first tuple element is then ``None``.
+        The compiled plan is identical either way (no retrace).
         """
         from repro.core.qdtree import IncrementalTightener
 
         bids = self.route(tree, cache, records, **opts)
         t = IncrementalTightener(tree)
         t.update(records, bids)
-        return bids, t.as_partial()
+        return (bids if return_bids else None), t.as_partial()
 
 
 # ---------------------------------------------------------------------------
@@ -124,12 +131,13 @@ class NumpyBackend(Backend):
         )
         return qry.queries_intersect(conj, wt)
 
-    def fused_ingest(self, tree, cache, records, **opts):
+    def fused_ingest(self, tree, cache, records, return_bids=True, **opts):
         # the numpy oracle IS the bit-identity reference for every fused
         # backend (kernels/ref.py)
         from repro.kernels.ref import fused_ingest_ref
 
-        return fused_ingest_ref(tree, records)
+        bids, partial = fused_ingest_ref(tree, records)
+        return (bids if return_bids else None), partial
 
 
 # ---------------------------------------------------------------------------
@@ -466,7 +474,7 @@ class JaxBackend(Backend):
 
         return cache.get(key, build)
 
-    def fused_ingest(self, tree, cache, records, **opts):
+    def fused_ingest(self, tree, cache, records, return_bids=True, **opts):
         from repro.kernels.ref import partial_from_fused
 
         plan = self._ingest_plan(tree, cache)
@@ -489,6 +497,10 @@ class JaxBackend(Backend):
             np.asarray(advt)[:L],
             np.asarray(advf)[:L],
         )
+        # partials-only callers skip the per-row D2H (the plan still
+        # computes bids on device; only the host conversion is elided)
+        if not return_bids:
+            return None, partial
         return np.asarray(bids[:m]).astype(np.int32), partial
 
     def query_hits(self, tree, cache, wt, **opts):
@@ -699,7 +711,8 @@ class PallasBackend(Backend):
 
     def fused_ingest(
         self, tree, cache, records, tile_m: int | None = None,
-        tile_l: int | None = None, interpret: bool | None = None, **opts,
+        tile_l: int | None = None, interpret: bool | None = None,
+        return_bids: bool = True, **opts,
     ):
         from repro.kernels.ref import partial_from_fused
 
@@ -733,6 +746,8 @@ class PallasBackend(Backend):
             np.asarray(advt)[:L],
             np.asarray(advf)[:L],
         )
+        if not return_bids:
+            return None, partial
         bids_np = (np.asarray(bids)[:m, 0] - 1.0).astype(np.int32)
         return bids_np, partial
 

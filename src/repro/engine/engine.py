@@ -397,13 +397,19 @@ class LayoutEngine:
         # separate accumulator when there is no tightener to read back
         sizes = None if tighten else np.zeros(self.tree.n_leaves, np.int64)
         use_fused = fused and tightener is not None
+        # nothing downstream reads per-row block ids when there is no
+        # spill buffer and no observation probe: skip their device→host
+        # transfer per batch (the dominant host sync of the warm loop)
+        need_bids = buffers is not None or probe is not None
         n_batches = n_records = 0
         t0 = time.perf_counter()
         for batch in batches:
             if batch.shape[0] == 0:
                 continue
             if use_fused:
-                bids, part = self.fused_step(batch, backend=backend)
+                bids, part = self.fused_step(
+                    batch, backend=backend, return_bids=need_bids
+                )
             else:
                 bids = self.route(batch, backend=backend)
             if buffers is not None:

@@ -18,18 +18,32 @@ regardless of association or order).  Three pieces:
   the merged tightening into the tree — bit-identical to single-stream
   ``LayoutEngine.ingest`` over the same records.
 * :func:`sharded_ingest` wires both onto a ``concurrent.futures``
-  executor.  Thread pools (the default) share the live engine's compiled
-  plans; ``executor="process"`` takes the real multi-host shape instead:
-  each spawn-context worker rebuilds a ShardIngestor against a pickled
-  :func:`replicate_tree` replica, warms its own plans, and ships only the
-  (pure-numpy, pickle/npz-serializable) ShardState back to the parent's
-  MergeCoordinator.
+  executor.  ``executor="process"`` — the default for ``n_shards >= 2``
+  — takes the real multi-host shape: spawn-context workers in the
+  resident module pool hold a :class:`ProcessShardSession` replica of
+  the routing plan and ship only the (pure-numpy, pickle/npz-
+  serializable) ShardState back to the parent's MergeCoordinator.
+  ``executor="thread"`` shares the live engine's compiled plans but
+  contends on the GIL (the documented 0.44× footgun —
+  :class:`PerformanceWarning`).
+
+The process path streams rounds through a :class:`ProcessShardSession`:
+the tree replica is shipped AT MOST ONCE per pool worker per tree
+generation (round tasks carry a session token; an unseeded worker raises
+:class:`ReplicaMissing` and the parent retries that one task with the
+payload attached), and the parent folds ShardStates as they complete —
+merge overlaps the slower shards' routing.
 
 Shards route + tighten through the fused single-pass path
 (``LayoutEngine.fused_step``) by default — bit-identical to the legacy
-two-pass loop, each record touched once.
+two-pass loop, each record touched once.  A shard with no spill buffer
+and no observation probe skips the per-row block-id device→host
+transfer entirely (``return_bids=False``): the partials it streams back
+are aggregates, never rows.
 
-``LayoutService.ingest_sharded`` is the lifecycle facade over this module.
+``LayoutService.ingest`` (``IngestOptions(shards=k)``) is the lifecycle
+facade over this module; ``repro.coordinator`` folds the same
+ShardStates fleet-wide.
 """
 
 from __future__ import annotations
@@ -39,10 +53,19 @@ from __future__ import annotations
 import atexit
 import contextlib
 import dataclasses
+import itertools
 import multiprocessing
+import os
+import tempfile
 import threading
 import time
-from concurrent.futures import Executor, ProcessPoolExecutor, ThreadPoolExecutor
+import warnings
+from concurrent.futures import (
+    Executor,
+    ProcessPoolExecutor,
+    ThreadPoolExecutor,
+    as_completed,
+)
 from typing import Iterable, Optional
 
 import numpy as np
@@ -56,6 +79,50 @@ from repro.engine.engine import (
     WindowStat,
     engine_for,
 )
+
+
+class PerformanceWarning(UserWarning):
+    """A requested configuration is known to lose wall-clock."""
+
+
+_THREAD_FOOTGUN = (
+    "executor='thread' with n_shards={k}: shard routing shares one GIL, "
+    "measured at 0.44x single-stream wall-clock at k=8 "
+    "(BENCH_sharded_ingest.json); executor='process' (the default for "
+    "n_shards >= 2) routes shards in resident spawn workers instead"
+)
+
+
+def resolve_executor(
+    executor: "Executor | str | None",
+    n_shards: int,
+    stacklevel: int = 3,
+) -> "Executor | str":
+    """Resolve the sharded-ingest executor default.
+
+    ``None`` picks ``"process"`` for ``n_shards >= 2`` — the only
+    executor that wins wall-clock off the GIL — and ``"thread"`` for a
+    single shard (no parallelism to lose, no pool to keep resident).
+    An explicit ``executor="thread"`` with multiple shards emits
+    :class:`PerformanceWarning` citing the measured 0.44× regression,
+    but is honored: shared-plan thread shards remain the right tool for
+    deterministic tests and for custom ``Executor`` protocols.
+    """
+    if executor is None:
+        return "process" if n_shards >= 2 else "thread"
+    if isinstance(executor, str):
+        if executor not in ("thread", "process"):
+            raise ValueError(
+                f"executor must be 'thread', 'process', an Executor, or "
+                f"None — got {executor!r}"
+            )
+        if executor == "thread" and n_shards > 1:
+            warnings.warn(
+                _THREAD_FOOTGUN.format(k=n_shards),
+                PerformanceWarning,
+                stacklevel=stacklevel,
+            )
+    return executor
 
 
 @dataclasses.dataclass
@@ -220,13 +287,16 @@ class ShardIngestor:
         )
         n_batches = n_records = 0
         obs = WindowStat()
+        # a partials-only shard (no spill, no probe) streams aggregates,
+        # never rows — skip the per-row block-id device→host transfer
+        need_bids = spill is not None or self.probe is not None
         t0 = time.perf_counter()
         for batch in batches:
             if batch.shape[0] == 0:
                 continue
             if self.fused:
                 bids, part = self.engine.fused_step(
-                    batch, backend=self.backend
+                    batch, backend=self.backend, return_bids=need_bids
                 )
                 tightener.merge(part)
             else:
@@ -329,9 +399,11 @@ class ShardedIngestReport(IngestReport):
 
     n_shards: int = 0
     shard_wall_s: tuple[float, ...] = ()  # per-shard routing wall clock
-    merge_s: float = 0.0  # associative fold + publish
+    merge_s: float = 0.0  # publish step (the fold itself streams,
+    # overlapped with routing, so it no longer shows up here)
     published: bool = False
     stale_generation: bool = False
+    state: "Optional[ShardState]" = None  # merged partial (keep_state=True)
 
     @property
     def shard_records_per_s(self) -> float:
@@ -427,6 +499,315 @@ def shutdown_process_pool(wait: bool = True) -> None:
 atexit.register(shutdown_process_pool, wait=False)
 
 
+# -- resident worker replicas (the session protocol) -------------------------
+# Worker-process-side session cache.  Each spawn worker is single-threaded
+# (ProcessPoolExecutor runs one task at a time per worker) and the parent
+# never touches this dict, so no lock guards it.  Keyed by session token;
+# bounded by insertion-order eviction so abandoned sessions cannot pin
+# engines forever.
+_WORKER_KEEP = 4
+_WORKER_STATE: dict[str, dict] = {}
+
+#: parent-side token counter — tokens are identity, never folded into data
+_session_ids = itertools.count(1)
+
+
+class ReplicaMissing(RuntimeError):
+    """A pool worker was handed a round for a session it has not been
+    seeded with.  The parent catches this and retries that ONE task with
+    the ``(tree, records_path)`` payload attached — the
+    ship-until-confirmed protocol that bounds replica pickling to at
+    most once per worker per session."""
+
+
+def _worker_entry(token: str, tree, records_path: Optional[str]) -> dict:
+    """Fetch-or-install this worker's session entry (idempotent)."""
+    entry = _WORKER_STATE.get(token)
+    if entry is None:
+        entry = {
+            "engine": engine_for(tree),
+            "records": None,
+            "warmed": set(),
+        }
+        _WORKER_STATE[token] = entry
+        while len(_WORKER_STATE) > _WORKER_KEEP:
+            evict = next(iter(_WORKER_STATE))
+            if evict == token:
+                break
+            del _WORKER_STATE[evict]
+    if records_path is not None and entry["records"] is None:
+        # memory-map: k workers on one host share the page cache instead
+        # of holding k private copies of the staged stream
+        entry["records"] = np.load(records_path, mmap_mode="r")
+    return entry
+
+
+def _worker_seed(
+    token: str, tree, records_path: Optional[str], linger_s: float = 0.0
+) -> int:
+    """Idempotently install the session replica in this pool worker.
+
+    ``linger_s``: an already-seeded worker naps briefly before returning,
+    so a wave of seed tasks drains toward the workers that still need
+    one (a ProcessPoolExecutor cannot target a specific worker).
+    Returns this worker's pid, the parent's coverage receipt.
+    """
+    if token in _WORKER_STATE and linger_s > 0.0:
+        time.sleep(linger_s)
+    _worker_entry(token, tree, records_path)
+    return os.getpid()
+
+
+def _worker_round(
+    token: str,
+    shard_id: int,
+    n_shards: int,
+    rows: Optional[np.ndarray],
+    batch: int,
+    backend: Optional[str],
+    collect_blocks: bool,
+    probe: Optional[ObservationProbe],
+    fused: bool,
+    seed=None,  # (tree, records_path) | None — ReplicaMissing retry payload
+) -> tuple[int, ShardState]:
+    """Run one shard round against this worker's resident session engine.
+
+    ``rows`` is the shard's record slice (shipped mode) or None (staged
+    mode: the worker slices its resident record array locally, so the
+    task carries no rows at all).  Plans warm incrementally per distinct
+    batch size, once per worker per session — a warmed bucket never
+    retraces, no matter which shard lands here next round.
+    """
+    if token not in _WORKER_STATE and seed is None:
+        raise ReplicaMissing(token)
+    entry = _worker_entry(
+        token, *(seed if seed is not None else (None, None))
+    )
+    engine = entry["engine"]
+    if rows is None:
+        if entry["records"] is None:
+            raise ReplicaMissing(token)  # staged round, nothing staged here
+        rows = shard_slices(entry["records"], n_shards)[shard_id]
+    need = warm_sizes(rows.shape[0], 1, batch) - entry["warmed"]
+    if need:
+        if fused:
+            engine.warm_ingest(need, backend=backend)
+        else:
+            d = engine.tree.leaf_lo.shape[1]
+            for s in sorted(need):
+                engine.route(np.zeros((s, d), np.int32), backend=backend)
+        entry["warmed"] |= need
+    ingestor = ShardIngestor(
+        engine, shard_id=shard_id, backend=backend,
+        collect_blocks=collect_blocks, probe=probe, fused=fused,
+    )
+    return os.getpid(), ingestor.run(micro_batches(rows, batch))
+
+
+def _unlink_quiet(path: str) -> None:
+    with contextlib.suppress(OSError):
+        os.unlink(path)
+
+
+class ProcessShardSession:
+    """Parent-side handle streaming sharded rounds to the resident pool.
+
+    The old process path re-pickled the tree replica into every task of
+    every run — the fixed cost that made ``executor="process"`` lose
+    wall-clock (BENCH_sharded_ingest.json).  A session ships the replica
+    AT MOST ONCE per pool worker per tree generation: round tasks carry
+    only a token; a worker that has not been seeded raises
+    :class:`ReplicaMissing` and the parent retries that one task with
+    the payload attached.  Ingest/routing plan keys do not include leaf
+    descriptions, so a worker's warm plans stay valid across the
+    parent's tightening publishes — a session lives until the tree
+    object itself is replaced (rebuild / hot swap), when the owner
+    builds a new session (``LayoutService`` does this automatically).
+
+    :meth:`stage` additionally spills the stream to a temp ``.npy`` once
+    and has workers memory-map it, so steady-state rounds move only the
+    token-sized task and one ~25 KB ShardState reply per shard — the
+    fleet-worker shape ``benchmarks/coordinator.py`` measures.
+
+    Thread-safe: concurrent :meth:`round` calls are independent; the
+    shared counters below are folded under the session lock.
+    """
+
+    def __init__(
+        self,
+        layout: FrozenQdTree | LayoutEngine,
+        n_shards: int,
+        batch: int = 2048,
+        backend: Optional[str] = None,
+        fused: bool = True,
+    ):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.engine = (
+            layout
+            if isinstance(layout, LayoutEngine)
+            else engine_for(layout)
+        )
+        self.n_shards = int(n_shards)
+        self.batch = int(batch)
+        self.backend = backend
+        self.fused = bool(fused)
+        self.replica = replicate_tree(self.engine.tree)
+        self.token = f"shardsess-{os.getpid()}-{next(_session_ids)}"
+        self._lock = threading.Lock()
+        self._records_path: Optional[str] = None  # guarded by: self._lock
+        self._seeded: set[int] = set()  # guarded by: self._lock -- confirmed worker pids
+        self._reseeds = 0  # guarded by: self._lock -- ReplicaMissing retries served
+        self._rounds = 0  # guarded by: self._lock
+        self._closed = False  # guarded by: self._lock
+
+    @property
+    def pool(self) -> ProcessPoolExecutor:
+        """The resident module pool, grown to this session's shard count."""
+        return process_pool(self.n_shards)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "token": self.token,
+                "rounds": self._rounds,
+                "reseeds": self._reseeds,
+                "seeded_workers": len(self._seeded),
+                "staged": self._records_path is not None,
+            }
+
+    def stage(self, records: np.ndarray, max_waves: int = 16) -> int:
+        """Make ``records`` resident in the pool workers.
+
+        Spills the array to a temp ``.npy`` once (workers memory-map it
+        — one page-cache copy per host, not one per worker), then
+        pre-seeds the pool.  Subsequent ``round(None)`` calls slice the
+        staged stream worker-side.  Returns confirmed worker count.
+        """
+        fd, path = tempfile.mkstemp(prefix="qdshard-", suffix=".npy")
+        os.close(fd)
+        np.save(path, np.ascontiguousarray(records))
+        with self._lock:
+            if self._closed:
+                _unlink_quiet(path)
+                raise RuntimeError("session is closed")
+            old, self._records_path = self._records_path, path
+        if old is not None:
+            _unlink_quiet(old)
+        return self.seed(max_waves=max_waves)
+
+    def seed(self, max_waves: int = 16, linger_s: float = 0.02) -> int:
+        """Best-effort pre-seed of every pool worker.
+
+        Waves of idempotent seed tasks; already-seeded workers linger
+        briefly so the queue drains toward unseeded ones.  Correctness
+        never depends on coverage — an unseeded worker is caught by the
+        ReplicaMissing retry in :meth:`round` — this just keeps
+        first-round timings honest.  Returns confirmed worker count.
+        """
+        pool = self.pool
+        with self._lock:
+            path = self._records_path
+        procs = getattr(pool, "_processes", None)
+        target = len(procs) if procs else self.n_shards
+        for _ in range(max_waves):
+            with self._lock:
+                if len(self._seeded) >= target:
+                    break
+            futs = [
+                pool.submit(
+                    _worker_seed, self.token, self.replica, path, linger_s
+                )
+                for _ in range(self.n_shards)
+            ]
+            pids = [f.result() for f in futs]
+            with self._lock:
+                self._seeded.update(pids)
+        with self._lock:
+            return len(self._seeded)
+
+    def round(
+        self,
+        records: Optional[np.ndarray] = None,
+        collect_blocks: bool = False,
+        probe: Optional[ObservationProbe] = None,
+        fold=None,  # Callable[[ShardState], None] | None
+    ) -> list[ShardState]:
+        """Run one k-shard routing round; returns states in shard order.
+
+        ``records=None`` uses the staged stream (each worker slices its
+        resident copy locally); otherwise the given array is split and
+        its slices shipped with the tasks.  ``fold`` (if given) is
+        called with each ShardState as it completes, so the parent's
+        associative merge overlaps the slower shards' routing instead of
+        waiting for the full barrier (the merge commutes bit-exactly, so
+        completion order cannot change the result).
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("session is closed")
+            path = self._records_path
+        if records is None and path is None:
+            raise ValueError(
+                "no records given and none staged; call stage() first"
+            )
+        parts = (
+            shard_slices(records, self.n_shards)
+            if records is not None
+            else None
+        )
+        pool = self.pool
+
+        def _submit(i: int, seed):
+            rows = parts[i] if parts is not None else None
+            return pool.submit(
+                _worker_round, self.token, i, self.n_shards, rows,
+                self.batch, self.backend, collect_blocks, probe,
+                self.fused, seed,
+            )
+
+        pending = {_submit(i, None): i for i in range(self.n_shards)}
+        states: dict[int, ShardState] = {}
+        pids: list[int] = []
+        reseeds = 0
+        while pending:
+            for fut in as_completed(list(pending)):
+                i = pending.pop(fut)
+                try:
+                    pid, state = fut.result()
+                except ReplicaMissing:
+                    # that worker has not seen this session yet: re-ship
+                    # the replica (and staged-records path) to it once
+                    reseeds += 1
+                    pending[_submit(i, (self.replica, path))] = i
+                    continue
+                states[i] = state
+                pids.append(pid)
+                if fold is not None:
+                    fold(state)
+        with self._lock:
+            self._rounds += 1
+            self._reseeds += reseeds
+            self._seeded.update(pids)
+        return [states[i] for i in range(self.n_shards)]
+
+    def close(self) -> None:
+        """Release the staged temp file; the pool (shared) stays up and
+        the workers' cached engines age out via the bounded session
+        cache."""
+        with self._lock:
+            self._closed = True
+            path, self._records_path = self._records_path, None
+        if path is not None:
+            _unlink_quiet(path)
+
+    def __enter__(self) -> "ProcessShardSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 def _process_shard_worker(
     tree: FrozenQdTree,
     part: np.ndarray,
@@ -478,12 +859,15 @@ def sharded_ingest(
     observe=None,  # Workload | WorkloadTensors | ObservationProbe | None
     publish_check=None,  # Callable[[], bool], evaluated under ``lock``
     fused: bool = True,
+    session: Optional[ProcessShardSession] = None,
+    keep_state: bool = False,
 ) -> ShardedIngestReport:
     """Shard ``records`` across parallel ingestors and merge associatively.
 
     Contiguously splits the stream into ``n_shards``, runs one
-    :class:`ShardIngestor` per shard on ``executor`` (a private thread pool
-    by default), folds the resulting ShardStates through a
+    :class:`ShardIngestor` per shard on ``executor`` (resident spawn
+    workers by default for ``n_shards >= 2``; see below), folds the
+    resulting ShardStates through a
     :class:`MergeCoordinator`, and (when ``tighten``) publishes the merged
     tightening — bit-identical to ``LayoutEngine.ingest`` over the same
     records for every k.  With ``tighten=False`` the tree is left
@@ -499,31 +883,47 @@ def sharded_ingest(
     hot-swapped out mid-run: it is evaluated under ``lock`` immediately
     before the tightening is applied, and if it returns False the publish
     is skipped and the report carries ``stale_generation=True`` (see
-    ``LayoutService.ingest_sharded``).
+    ``LayoutService.ingest``).  ``keep_state=True`` attaches the merged
+    :class:`ShardState` to ``report.state`` — the seam fleet callers use
+    to forward the partial to a ``repro.coordinator.FleetCoordinator``
+    (typically with ``tighten=False``: route here, publish there).
 
-    ``executor`` selects the pool: ``None`` / ``"thread"`` (or any
-    thread-based Executor instance) shares the live engine's compiled
-    plans across shards; ``"process"`` (or a ProcessPoolExecutor
-    instance) takes the multi-host shape — spawn-context workers rebuild
-    ShardIngestors against a pickled :func:`replicate_tree` replica and
-    ship ShardStates back, so nothing unpicklable ever crosses the
-    process boundary and shard routing escapes the GIL.  The string form
-    uses the RESIDENT module pool (:func:`process_pool`, grown to
-    ``n_shards``): spawn + jax-import cost is paid once per worker for
-    the whole interpreter lifetime, not once per run.
+    ``executor`` selects the pool.  ``None`` resolves via
+    :func:`resolve_executor`: ``"process"`` for ``n_shards >= 2``,
+    ``"thread"`` for one shard.  ``"process"`` takes the multi-host
+    shape — spawn-context workers in the RESIDENT module pool
+    (:func:`process_pool`) run against a :class:`ProcessShardSession`
+    replica (shipped at most once per worker — pass ``session=`` to
+    reuse a seeded session across runs; a fresh per-run session is
+    created otherwise) and ship ShardStates back, so nothing unpicklable
+    ever crosses the process boundary and shard routing escapes the GIL.
+    ``"thread"`` shares the live engine's compiled plans but serializes
+    routing on the GIL — the documented 0.44× footgun
+    (:class:`PerformanceWarning`).  A ``ProcessPoolExecutor`` instance
+    keeps the legacy per-task replica shipping; any other ``Executor``
+    instance drives the shared-plan ``.map`` protocol.
+
+    The parent folds ShardStates AS THEY COMPLETE (``as_completed``
+    streaming into the MergeCoordinator), so the associative merge
+    overlaps the slower shards' routing; the fold commutes bit-exactly,
+    so completion order cannot change the published result.
     """
     engine = (
         layout if isinstance(layout, LayoutEngine) else engine_for(layout)
     )
-    if isinstance(executor, str):
-        if executor not in ("thread", "process"):
+    if session is not None:
+        if (
+            session.n_shards != n_shards
+            or session.batch != batch
+            or session.fused != fused
+            or session.engine.tree is not engine.tree
+        ):
             raise ValueError(
-                f"executor must be 'thread', 'process', an Executor, or "
-                f"None — got {executor!r}"
+                "session does not match this run's tree/shards/batch/fused"
             )
-    use_process = executor == "process" or isinstance(
-        executor, ProcessPoolExecutor
-    )
+        executor = "process"
+    else:
+        executor = resolve_executor(executor, n_shards)
     if buffers is not None:
         collect_blocks = True
     traces0 = planlib.trace_counts()
@@ -532,33 +932,43 @@ def sharded_ingest(
         if observe is not None
         else None
     )
-    shard_parts = shard_slices(records, n_shards)
+    coordinator = MergeCoordinator(engine.tree)
     t0 = time.perf_counter()
-    if use_process:
+    if executor == "process" and session is None:
+        session_own = ProcessShardSession(
+            engine, n_shards, batch=batch, backend=backend, fused=fused
+        )
+    else:
+        session_own = None
+    if executor == "process":
+        sess = session if session is not None else session_own
+        try:
+            states = sess.round(
+                records, collect_blocks=collect_blocks, probe=probe,
+                fold=coordinator.add,
+            )
+        finally:
+            if session_own is not None:
+                session_own.close()
+    elif isinstance(executor, ProcessPoolExecutor):
+        # legacy stateless shape: the replica ships with every task
         replica = replicate_tree(engine.tree)
+        shard_parts = shard_slices(records, n_shards)
         args = [
             (replica, shard_parts[i], i, batch, backend, collect_blocks,
              probe, fused)
             for i in range(n_shards)
         ]
-        if isinstance(executor, ProcessPoolExecutor):
-            states = [
-                f.result()
-                for f in [
-                    executor.submit(_process_shard_worker, *a) for a in args
-                ]
+        states = [
+            f.result()
+            for f in [
+                executor.submit(_process_shard_worker, *a) for a in args
             ]
-        else:
-            # the resident spawn pool: first use pays spawn + jax import
-            # once per worker, later runs reuse the warm interpreters
-            pool = process_pool(n_shards)
-            states = [
-                f.result()
-                for f in [
-                    pool.submit(_process_shard_worker, *a) for a in args
-                ]
-            ]
+        ]
+        for state in states:
+            coordinator.add(state)
     else:
+        shard_parts = shard_slices(records, n_shards)
         ingestors = [
             ShardIngestor(
                 engine, shard_id=i, backend=backend,
@@ -567,19 +977,29 @@ def sharded_ingest(
             for i in range(n_shards)
         ]
         shard_batches = [micro_batches(part, batch) for part in shard_parts]
-        if executor is None or executor == "thread":
+        if executor == "thread":
+            by_shard: dict[int, ShardState] = {}
             with ThreadPoolExecutor(max_workers=n_shards) as pool:
-                states = list(
-                    pool.map(_run_shard, ingestors, shard_batches)
-                )
+                futs = {
+                    pool.submit(_run_shard, ing, b): i
+                    for i, (ing, b) in enumerate(
+                        zip(ingestors, shard_batches)
+                    )
+                }
+                for fut in as_completed(futs):
+                    state = fut.result()
+                    by_shard[futs[fut]] = state
+                    coordinator.add(state)
+            states = [by_shard[i] for i in range(n_shards)]
         else:
+            # custom Executor instances keep the .map protocol (tests
+            # interpose here to exercise swap-during-run races)
             states = list(
                 executor.map(_run_shard, ingestors, shard_batches)
             )
+            for state in states:
+                coordinator.add(state)
     t_merge = time.perf_counter()
-    coordinator = MergeCoordinator(engine.tree)
-    for state in states:
-        coordinator.add(state)
     published = stale = False
     if tighten:
         # publish under the caller's lock; re-check liveness there — the
@@ -612,6 +1032,9 @@ def sharded_ingest(
         merge_s=t1 - t_merge,
         published=published,
         stale_generation=stale,
+        # the merged partial itself, for callers that forward it to a
+        # fleet coordinator (repro.coordinator) instead of publishing here
+        state=merged if keep_state else None,
     )
 
 
@@ -651,13 +1074,19 @@ def states_bit_identical(a: ShardState, b: ShardState) -> bool:
 
 __all__ = [
     "MergeCoordinator",
+    "PerformanceWarning",
+    "ProcessShardSession",
+    "ReplicaMissing",
     "ShardIngestor",
     "ShardState",
     "ShardedIngestReport",
     "micro_batches",
+    "process_pool",
     "replicate_tree",
+    "resolve_executor",
     "shard_slices",
     "sharded_ingest",
+    "shutdown_process_pool",
     "states_bit_identical",
     "warm_sizes",
 ]

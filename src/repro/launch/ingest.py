@@ -145,11 +145,21 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=1,
                     help="ingest with N parallel shard ingestors "
                          "(associative merge; bit-identical to --shards 1)")
-    ap.add_argument("--executor", default="thread",
-                    choices=("thread", "process"),
-                    help="shard executor (--shards > 1): 'thread' shares "
-                         "the live engine's compiled plans, 'process' "
-                         "spawns workers against a pickled tree replica")
+    ap.add_argument("--executor", default="auto",
+                    choices=("auto", "thread", "process"),
+                    help="shard executor (--shards > 1): 'process' routes "
+                         "shards in resident spawn workers against a "
+                         "shipped tree replica (the 'auto' default for "
+                         ">= 2 shards); 'thread' shares the live engine's "
+                         "compiled plans but also its GIL — measured "
+                         "0.44x single-stream at k=8, so it warns")
+    ap.add_argument("--coordinator", action="store_true",
+                    help="route sharded rounds through a FleetCoordinator: "
+                         "rounds submit ShardState/TrackerState partials "
+                         "instead of publishing locally; the coordinator "
+                         "folds them on --cadence and owns every publish")
+    ap.add_argument("--cadence", type=int, default=4,
+                    help="coordinator fold cadence, in submitted partials")
     ap.add_argument("--no-fused", action="store_true",
                     help="use the legacy two-pass route+tighten path "
                          "instead of the fused single-pass kernels")
@@ -288,44 +298,61 @@ def main() -> None:
         engine.query_hits(
             observed if observed is not None and len(observed) else work
         )
+    executor = None if args.executor == "auto" else args.executor
+    coordinator = None
+    if args.coordinator:
+        if args.shards <= 1:
+            raise SystemExit("--coordinator needs --shards > 1")
+        from repro.coordinator import FleetCoordinator
+
+        coordinator = FleetCoordinator(
+            service, cadence=args.cadence, tracker=tracker
+        )
+        print(
+            f"[ingest] fleet coordinator on: folds every "
+            f"{args.cadence} submitted partial(s); rounds submit "
+            "aggregates instead of publishing locally"
+        )
     if args.shards > 1:
-        if monitor is None and tracker is None:
-            shard_rounds = [service.ingest_sharded(
-                records, args.shards, batch=args.batch, buffers=buffers,
+        if monitor is None and tracker is None and coordinator is None:
+            shard_rounds = [service.ingest(
+                records, buffers=buffers,
                 options=IngestOptions(
-                    executor=args.executor, fused=fused
+                    shards=args.shards, batch=args.batch,
+                    executor=executor, fused=fused,
                 ),
             )]
             report = shard_rounds[0]
         else:
             # one sharded run yields ONE drift observation — stream in
             # rounds so the monitor sees a sequence it can trigger on
-            # (min_fill/hysteresis need consecutive observations) and the
-            # tracker's decay generations advance with the stream
+            # (min_fill/hysteresis need consecutive observations), the
+            # tracker's decay generations advance with the stream, and a
+            # coordinator gets a cadence of partials to fold
             n_rounds = max(args.drift_window, 4)
             chunk = max(-(-records.shape[0] // n_rounds), args.shards)
             shard_rounds = []
             for s in range(0, records.shape[0], chunk):
                 if service.tree is not frozen:
-                    # a drift rebuild deployed: later rounds route on the
-                    # new live tree — restart buffers for its geometry
+                    # a rebuild or coordinator fold deployed: later rounds
+                    # route on the new live tree — restart buffers for it
                     frozen = service.tree
                     buffers = BlockBuffers.for_tree(frozen)
                     print(
-                        "[ingest] drift rebuild deployed; block buffers "
-                        "restarted for the new generation"
+                        "[ingest] new generation live; block buffers "
+                        "restarted for its geometry"
                     )
                 if tracker is not None:
                     service.serve(
                         serve_round(qrng, work, args.serve_queries),
                         tracker=tracker,
                     )
-                shard_rounds.append(service.ingest_sharded(
-                    records[s : s + chunk], args.shards, batch=args.batch,
-                    buffers=buffers,
+                shard_rounds.append(service.ingest(
+                    records[s : s + chunk], buffers=buffers,
                     options=IngestOptions(
-                        monitor=monitor, executor=args.executor,
-                        fused=fused,
+                        shards=args.shards, batch=args.batch,
+                        monitor=monitor, executor=executor, fused=fused,
+                        coordinator=coordinator,
                     ),
                 ))
             report = merge_round_reports(shard_rounds)
@@ -341,6 +368,17 @@ def main() -> None:
                 "[ingest] publish skipped for a round: the tree was "
                 "hot-swapped out mid-run (stale generation)"
             )
+        if coordinator is not None:
+            if coordinator.stats()["pending"]:
+                coordinator.fold()  # flush partials below the cadence
+            cstats = coordinator.stats()
+            print(
+                f"[ingest] coordinator: {cstats['folds']} fold(s), "
+                f"{cstats['stale_dropped']} stale partial(s) dropped, "
+                f"live generation {service.generation} "
+                f"(desc v{service.live_epoch().desc_version})"
+            )
+            service.close_ingest_sessions()
     elif tracker is not None:
         # live traffic interleaves with ingestion: serve a sampled query
         # round, then ingest a chunk of the stream — every round closes
@@ -492,6 +530,9 @@ def main() -> None:
         "ingest_traces": report.traces,
         "scanned_fraction": stats.scanned_fraction,
         "rebuild": rebuild_summary,
+        "coordinator": (
+            coordinator.stats() if coordinator is not None else None
+        ),
         "drift": drift_summary,
         "workload": args.workload,
         "workload_tracking": tracker_summary,

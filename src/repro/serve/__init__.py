@@ -18,7 +18,6 @@ from repro.serve.cache import (
     EXACT_RESOLUTION,
     CacheStats,
     Epoch,
-    EpochLike,
     ResultCache,
     exact_signatures,
 )
@@ -39,7 +38,6 @@ __all__ = [
     "AdmissionStats",
     "CacheStats",
     "Epoch",
-    "EpochLike",
     "LatencyRecorder",
     "QueryServer",
     "QueryTicket",

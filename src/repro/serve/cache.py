@@ -54,9 +54,17 @@ from repro.service.tracker import adv_filter_for, query_signatures
 # lossless (signatures are fixed points trivially).
 EXACT_RESOLUTION = 1 << 62
 
-#: Anything :func:`Epoch.of` coerces: an Epoch or a legacy
-#: ``(generation, desc_version[, replica_id])`` tuple.
-EpochLike = Union[Epoch, tuple]
+def _as_epoch(e) -> Epoch:
+    """Every cache key carries a real :class:`Epoch` — the legacy
+    ``(generation, desc_version)`` tuple coercion (``Epoch.of``) is gone,
+    and a tuple would silently key its own namespace (every lookup a
+    miss), so reject it loudly instead."""
+    if not isinstance(e, Epoch):
+        raise TypeError(
+            f"expected an Epoch, got {type(e).__name__}; legacy "
+            "(generation, desc_version) tuples are no longer coerced"
+        )
+    return e
 
 
 def exact_signatures(
@@ -149,7 +157,7 @@ class ResultCache:
             )
 
     def activate(
-        self, epoch: Union[EpochLike, Sequence[EpochLike]]
+        self, epoch: Union[Epoch, Sequence[Epoch]]
     ) -> int:
         """Pin the cache to ``epoch`` (one Epoch, or a sequence — one per
         replica); purge that replica's entries from any other epoch.
@@ -164,14 +172,10 @@ class ResultCache:
         correctness never depends on the purge, only hygiene does,
         because lookups key on the live epoch(s).
         """
-        if isinstance(epoch, Epoch) or (
-            isinstance(epoch, tuple) and epoch and not isinstance(
-                epoch[0], (Epoch, tuple)
-            )
-        ):
-            epochs = (Epoch.of(epoch),)
+        if isinstance(epoch, Epoch):
+            epochs = (epoch,)
         else:
-            epochs = tuple(Epoch.of(e) for e in epoch)
+            epochs = tuple(_as_epoch(e) for e in epoch)
         invalidated = 0
         with self._lock:
             for e in epochs:
@@ -189,9 +193,9 @@ class ResultCache:
                 invalidated += len(stale)
         return invalidated
 
-    def get(self, epoch: EpochLike, sig: tuple) -> Optional[np.ndarray]:
+    def get(self, epoch: Epoch, sig: tuple) -> Optional[np.ndarray]:
         """The cached block IDs for ``sig`` at ``epoch``, or None."""
-        key = (Epoch.of(epoch), sig)
+        key = (_as_epoch(epoch), sig)
         with self._lock:
             bids = self._entries.get(key)
             if bids is None:
@@ -202,7 +206,7 @@ class ResultCache:
             return bids
 
     def get_many(
-        self, epoch: EpochLike, sigs: list[tuple]
+        self, epoch: Epoch, sigs: list[tuple]
     ) -> list[Optional[np.ndarray]]:
         """Batched :meth:`get`: one lock acquisition for a whole dispatch
         (the cache-hit serving path is lock-bound once signatures are
@@ -213,7 +217,7 @@ class ResultCache:
         ]
 
     def lookup(
-        self, epochs: Sequence[EpochLike], sigs: list[tuple]
+        self, epochs: Sequence[Epoch], sigs: list[tuple]
     ) -> list[Optional[tuple[Epoch, np.ndarray]]]:
         """Batched multi-replica lookup: for each signature, the first
         hit across ``epochs`` (replica order) as ``(epoch, bids)``, else
@@ -221,7 +225,7 @@ class ResultCache:
         matter how many replicas are live — an entry lives under the
         replica that routed it, so replica order is also cheapest-first
         provenance."""
-        keys = tuple(Epoch.of(e) for e in epochs)
+        keys = tuple(_as_epoch(e) for e in epochs)
         out: list[Optional[tuple[Epoch, np.ndarray]]] = []
         hits = 0
         with self._lock:
@@ -248,7 +252,7 @@ class ResultCache:
             self.stats.misses += len(sigs) - hits
         return out
 
-    def put(self, epoch: EpochLike, sig: tuple, bids: np.ndarray) -> bool:
+    def put(self, epoch: Epoch, sig: tuple, bids: np.ndarray) -> bool:
         """Insert a routed result computed at ``epoch``.
 
         Returns False (and counts ``stale_puts``) when ``epoch`` is not
@@ -256,7 +260,7 @@ class ResultCache:
         against a layout that was retired while the dispatch was in
         flight.
         """
-        epoch = Epoch.of(epoch)
+        epoch = _as_epoch(epoch)
         value = np.asarray(bids, np.int32)
         value.setflags(write=False)
         with self._lock:
@@ -289,7 +293,6 @@ __all__ = [
     "EXACT_RESOLUTION",
     "CacheStats",
     "Epoch",
-    "EpochLike",
     "ResultCache",
     "exact_signatures",
 ]

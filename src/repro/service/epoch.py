@@ -47,20 +47,5 @@ class Epoch:
         yield self.desc_version
         yield self.replica_id
 
-    @classmethod
-    def of(cls, value) -> "Epoch":
-        """Coerce a legacy ``(generation, desc_version[, replica_id])``
-        tuple (or an Epoch, returned as-is) into an :class:`Epoch`."""
-        if isinstance(value, cls):
-            return value
-        parts = tuple(value)
-        if not 2 <= len(parts) <= 3:
-            raise ValueError(
-                f"epoch must be (generation, desc_version[, replica_id]), "
-                f"got {value!r}"
-            )
-        replica = int(parts[2]) if len(parts) == 3 else 0
-        return cls(int(parts[0]), int(parts[1]), replica)
-
 
 __all__ = ["Epoch"]

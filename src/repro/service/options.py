@@ -4,49 +4,76 @@ Seven PRs of keyword accretion left ``LayoutService.ingest(observe=,
 monitor=, fused=)`` / ``ingest_sharded(..., executor=)`` /
 ``auto_rebuilder(workload=, tracker=, config=)`` as an untyped kwarg
 sprawl — and the replica dimension would have multiplied it.  These
-dataclasses are the consolidated spellings:
+dataclasses are the consolidated spellings, now covering the parallelism
+axis too, so ONE entry point ingests everything:
 
-    svc.ingest(batches, IngestOptions(monitor=rebuilder, fused=False))
-    svc.ingest_sharded(records, 4, options=IngestOptions(executor="process"))
+    svc.ingest(batches)                                   # streaming
+    svc.ingest(records, IngestOptions(shards=4))          # process-parallel
+    svc.ingest(records, IngestOptions(shards=4,
+                                      coordinator=fleet)) # fleet-folded
     svc.auto_rebuilder(RebuildPolicy(workload="auto", tracker=t))
 
-The old kwargs remain accepted for one release via
-:func:`resolve_ingest_options` / the ``auto_rebuilder`` shim: each use
-raises a :class:`DeprecationWarning` naming the new spelling, then maps
-onto the dataclass — so existing callers keep working bit-identically
-while new code gets a typed surface.
+The loose ``observe=``/``monitor=``/``fused=``/``executor=`` kwargs had
+their one-release deprecation window (with warnings naming the
+replacement); the window is closed and they now raise ``TypeError``.
+The ``ingest_sharded(records, n_shards)`` method is the current
+one-release shim: it forwards to ``ingest`` with a DeprecationWarning.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
-#: kwargs the IngestOptions shim lifts off ``ingest``/``ingest_sharded``.
-_INGEST_OPTION_KEYS = ("observe", "monitor", "fused", "executor")
+#: kwargs that belong to IngestOptions; loose spellings are rejected.
+_INGEST_OPTION_KEYS = (
+    "observe", "monitor", "fused", "executor", "shards", "batch",
+    "coordinator",
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class IngestOptions:
     """How one ingest run observes, monitors, and parallelizes.
 
-    observe    Workload | WorkloadTensors | ObservationProbe — Eq. 1
-               per-batch skip accounting against a standing workload.
-    monitor    an :class:`~repro.service.drift.AutoRebuilder`: batches
-               tee into its reservoir and observations drive its drift
-               policy (may fire a background rebuild mid-stream).
-    fused      single-pass route+tighten kernels (default) vs the
-               two-pass route-then-tighten path.
-    executor   sharded ingest only: ``None``/``"thread"`` (shared-plan
-               thread pool), ``"process"`` (resident spawn workers), or
-               any ``concurrent.futures`` Executor.
+    observe      Workload | WorkloadTensors | ObservationProbe — Eq. 1
+                 per-batch skip accounting against a standing workload.
+    monitor      an :class:`~repro.service.drift.AutoRebuilder`: batches
+                 tee into its reservoir and observations drive its drift
+                 policy (may fire a background rebuild mid-stream).
+    fused        single-pass route+tighten kernels (default) vs the
+                 two-pass route-then-tighten path.
+    executor     sharded runs: ``None`` picks ``"process"`` (resident
+                 spawn workers) for ``shards >= 2`` and ``"thread"``
+                 otherwise; ``"thread"`` with multiple shards carries a
+                 documented PerformanceWarning (GIL-bound, measured
+                 0.44x); any ``concurrent.futures`` Executor instance is
+                 used as-is.
+    shards       None/1 streams single-stream; k >= 2 splits the record
+                 array across k ShardIngestors and folds their states
+                 associatively (requires an ndarray, not a batch
+                 iterable).
+    batch        micro-batch rows when ``ingest`` is handed a record
+                 array (sharded or not).
+    coordinator  a :class:`~repro.coordinator.FleetCoordinator`: the run
+                 routes and aggregates but does NOT publish locally —
+                 the merged ShardState is submitted to the coordinator,
+                 which folds partials fleet-wide and owns every publish.
     """
 
     observe: object = None
     monitor: object = None
     fused: bool = True
     executor: object = None
+    shards: Optional[int] = None
+    batch: int = 2048
+    coordinator: object = None
+
+    def __post_init__(self):
+        if self.shards is not None and self.shards < 1:
+            raise ValueError("shards must be >= 1")
+        if self.batch < 1:
+            raise ValueError("batch must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,41 +118,29 @@ class RebuildPolicy:
             raise ValueError("lam must be in [0, 1]")
 
 
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"{old} is deprecated; use {new}",
-        DeprecationWarning,
-        stacklevel=4,  # user code → service facade → resolver → here
-    )
-
-
 def resolve_ingest_options(
     options: Optional[IngestOptions],
     kw: dict,
     method: str,
 ) -> IngestOptions:
-    """Fold deprecated loose kwargs out of ``kw`` into an IngestOptions.
+    """Reject retired loose option kwargs; return the effective options.
 
-    Mutates ``kw`` (popping the lifted keys); the remainder passes
-    through to the engine layer untouched.  Mixing ``options`` with a
-    deprecated kwarg is an error — the shim exists to migrate call
-    sites, not to merge two spellings of the same thing.
+    The one-release shim that lifted loose ``observe=``/``monitor=``/
+    ``fused=``/``executor=`` kwargs into IngestOptions (with a
+    DeprecationWarning each) is retired: any option-surface kwarg in
+    ``kw`` now raises ``TypeError`` naming the typed spelling.  The
+    remaining ``kw`` passes through to the engine layer untouched
+    (``tighten=``, ``buffers=``, ``backend=`` ...).
     """
-    lifted = {k: kw.pop(k) for k in _INGEST_OPTION_KEYS if k in kw}
-    if not lifted:
-        return options if options is not None else IngestOptions()
-    names = ", ".join(f"{k}=" for k in sorted(lifted))
-    if options is not None:
+    loose = sorted(k for k in _INGEST_OPTION_KEYS if k in kw)
+    if loose:
+        names = ", ".join(f"{k}=" for k in loose)
         raise TypeError(
-            f"{method}() got both options=IngestOptions(...) and the "
-            f"deprecated loose kwarg(s) {names}; pass everything via "
-            f"IngestOptions"
+            f"{method}() no longer accepts the loose kwarg(s) {names} "
+            f"(the deprecation window closed); pass "
+            f"options=IngestOptions({names}...)"
         )
-    _deprecated(
-        f"{method}({names})",
-        f"{method}(..., options=IngestOptions({names}...))",
-    )
-    return IngestOptions(**lifted)
+    return options if options is not None else IngestOptions()
 
 
 __all__ = ["IngestOptions", "RebuildPolicy", "resolve_ingest_options"]

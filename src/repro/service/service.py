@@ -32,7 +32,7 @@ import threading
 import time
 import warnings
 from concurrent.futures import Executor  # noqa: F401 (re-export for callers)
-from typing import Callable, Iterable, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -122,6 +122,13 @@ class LayoutService:
         self._gen = 0  # guarded by: self._lock
         self._versions: dict[int, LayoutVersion] = {}  # guarded by: self._lock
         self._swap_listeners: list[Callable[[LayoutVersion], None]] = []  # guarded by: self._lock
+        # resident ProcessShardSessions for sharded ingest, keyed by
+        # (generation, shards, batch, fused, backend): the tree replica
+        # ships to the spawn workers once per generation, not per call
+        self._sessions: dict[tuple, object] = {}  # guarded by: self._lock
+        # fleet-coordinator registrations: id(coordinator) -> (coordinator,
+        # WorkerHandle); the coordinator object is pinned so ids stay unique
+        self._coordinators: dict[int, tuple] = {}  # guarded by: self._lock
         self._live = self._new_version(layout)  # swap-guarded by: self._lock
         self._rset = ReplicaSet(  # swap-guarded by: self._lock
             (self._live,),
@@ -292,36 +299,67 @@ class LayoutService:
 
     def ingest(
         self,
-        batches: Iterable[np.ndarray],
+        records,  # np.ndarray | Iterable[np.ndarray]
         options: Optional[IngestOptions] = None,
         **kw,
     ):
-        """Streaming ingestion into the live primary (``LayoutEngine.ingest``).
+        """Ingestion into the live primary — the ONE ingest entry point.
 
-        ``options`` is the typed :class:`IngestOptions` surface
-        (``observe``/``monitor``/``fused``); the loose kwargs of the same
-        names remain accepted for one release with a DeprecationWarning.
+        ``records`` is either an iterable of micro-batches (streamed
+        through ``LayoutEngine.ingest``) or a single record array, which
+        is micro-batched at ``options.batch`` rows.  Everything else is
+        :class:`IngestOptions`:
+
+        * ``shards=k`` (k >= 2; needs a record array) splits the stream
+          across k ShardIngestors — resident spawn-pool workers by
+          default (``executor``) — folds their ShardStates
+          associatively, and publishes the merged tightening under the
+          service lock.  Bit-identical to the streaming path over the
+          same records.  The per-generation worker sessions are cached
+          on the service, so the tree replica ships to the pool once per
+          generation, not once per call.
+        * ``monitor`` (an :class:`~repro.service.drift.AutoRebuilder`)
+          tees batches into the monitor's reservoir and scores them
+          against its standing workload (Eq. 1 per-batch accounting
+          through the compiled plan); the monitor may fire a background
+          rebuild mid-stream.
+        * ``coordinator`` (a :class:`~repro.coordinator.FleetCoordinator`)
+          turns the run into a fleet worker: route and aggregate here,
+          publish THERE — the merged ShardState is submitted for the
+          coordinator's cadence fold instead of being applied locally.
+
         Remaining ``**kw`` passes through to the engine layer
         (``tighten=``, ``buffers=``, ``backend=`` ...).
 
-        With ``monitor`` (an :class:`~repro.service.drift.AutoRebuilder`),
-        every batch is teed into the monitor's record reservoir and scored
-        against its standing workload (Eq. 1 per-batch accounting through
-        the compiled plan); the monitor may fire a background rebuild
-        mid-stream.  The run itself keeps routing/tightening the engine
-        captured at call time — a concurrent hot swap takes effect for the
-        *next* ingest call, exactly like any other in-flight operation.
-        Once a swap lands, the remainder of this call's observations
-        (which still measure the superseded tree) are dropped rather than
-        fed to the freshly rebaselined monitor, so one long stream cannot
-        re-trigger redundant rebuilds against a tree that no longer
-        serves; batches keep filling the reservoir throughout.
+        The run routes/tightens the engine captured at call time — a
+        concurrent hot swap takes effect for the *next* call.  On the
+        streaming path, post-swap observations (which still measure the
+        superseded tree) are dropped rather than fed to the freshly
+        rebaselined monitor; on the sharded path, liveness is re-checked
+        under the lock at publish time and a stale run returns its
+        (still-valid) aggregates with ``published=False,
+        stale_generation=True``.
 
         Replicated services ingest into the primary replica; secondary
         replicas are read-optimized copies refreshed by the next
         ``rebuild_replicas`` deploy (see ``repro.service.replica``).
         """
         options = resolve_ingest_options(options, kw, "ingest")
+        shards = options.shards or 1
+        sharded = shards >= 2 or options.coordinator is not None
+        if isinstance(records, np.ndarray):
+            if sharded:
+                return self._ingest_sharded(records, shards, options, kw)
+            from repro.engine.sharded import micro_batches
+
+            batches = micro_batches(records, options.batch)
+        elif sharded:
+            raise TypeError(
+                "IngestOptions(shards=/coordinator=) needs a record "
+                "array, not a batch iterable"
+            )
+        else:
+            batches = records
         live = self._live
         monitor = options.monitor
         if options.observe is not None:
@@ -345,6 +383,109 @@ class LayoutService:
             batches = monitor.tee(batches)
         return live.engine.ingest(batches, **kw)
 
+    def _ingest_sharded(self, records, n_shards, options, kw):
+        """The sharded arm of :meth:`ingest` (record array, shards >= 2
+        and/or a fleet coordinator)."""
+        from repro.engine.sharded import sharded_ingest
+
+        live = self._live  # consistent engine/tree view for the whole run
+        monitor = options.monitor
+        coordinator = options.coordinator
+        if options.observe is not None:
+            kw["observe"] = options.observe
+        kw.setdefault("fused", options.fused)
+        if monitor is not None and "observe" not in kw:
+            observed = monitor.current_workload()
+            if observed is not None and len(observed):
+                kw["observe"] = observed
+        session = None
+        if options.executor == "process" or (
+            options.executor is None and n_shards >= 2
+        ):
+            session = self._shard_session(live, n_shards, options, kw)
+        if coordinator is not None:
+            # route-and-aggregate only: the coordinator owns every
+            # publish, so local tightening is off and the merged partial
+            # ships to its cadence fold instead
+            kw.setdefault("tighten", False)
+            kw["keep_state"] = True
+        report = sharded_ingest(
+            live.engine, records, n_shards, batch=options.batch,
+            executor=options.executor, lock=self._lock,
+            publish_check=lambda: self._live is live,
+            session=session, **kw,
+        )
+        if coordinator is not None and report.state is not None:
+            state = report.state
+            if state.chunks:
+                # the fleet protocol ships aggregates, never rows: any
+                # spill chunks were already drained into the caller's
+                # local buffers by sharded_ingest
+                state = dataclasses.replace(state, chunks={})
+            coordinator.submit(
+                self._coordinator_handle(coordinator),
+                state=state,
+                generation=live.generation,
+            )
+        if monitor is not None:
+            monitor.add_records(records)
+            if report.observation is not None:
+                monitor.observe(report.observation)
+        return report
+
+    def _shard_session(self, live, n_shards, options, kw):
+        """The cached resident worker session for this (generation, shape).
+
+        Sessions of superseded generations are closed and dropped on the
+        way — their replicas route the outgoing tree and must not serve
+        another round.
+        """
+        from repro.engine.sharded import ProcessShardSession
+
+        backend = kw.get("backend")
+        key = (
+            live.generation, n_shards, options.batch, options.fused,
+            backend,
+        )
+        with self._lock:
+            dropped = [
+                self._sessions.pop(k)
+                for k in list(self._sessions)
+                if k[0] != live.generation
+            ]
+            session = self._sessions.get(key)
+            if session is None:
+                session = ProcessShardSession(
+                    live.engine, n_shards, batch=options.batch,
+                    backend=backend, fused=options.fused,
+                )
+                self._sessions[key] = session
+        for s in dropped:
+            s.close()
+        return session
+
+    def close_ingest_sessions(self) -> None:
+        """Release every cached sharded-ingest worker session (the
+        resident spawn pool itself is module-owned:
+        ``repro.engine.sharded.shutdown_process_pool``)."""
+        with self._lock:
+            sessions, self._sessions = list(self._sessions.values()), {}
+        for s in sessions:
+            s.close()
+
+    def _coordinator_handle(self, coordinator):
+        """This service's :class:`~repro.coordinator.WorkerHandle` with
+        ``coordinator`` (registered once per coordinator object)."""
+        with self._lock:
+            entry = self._coordinators.get(id(coordinator))
+            if entry is None:
+                entry = (
+                    coordinator,
+                    coordinator.register(f"svc-{id(self):x}"),
+                )
+                self._coordinators[id(coordinator)] = entry
+        return entry[1]
+
     def ingest_sharded(
         self,
         records: np.ndarray,
@@ -353,97 +494,87 @@ class LayoutService:
         options: Optional[IngestOptions] = None,
         **kw,
     ):
-        """Shard-parallel ingestion into the live primary (engine.sharded).
-
-        Splits ``records`` contiguously across ``n_shards`` ShardIngestors
-        (a private thread pool by default; ``IngestOptions(executor=
-        "process")`` runs spawn-context workers against a pickled tree
-        replica instead — see ``sharded_ingest``), folds their
-        ShardStates associatively, and publishes the merged tightening
-        under the service lock — the description-version bump evicts
-        stale per-signature query plans exactly as a single-stream
-        ``ingest`` would, so readers hot-cut to the tightened
-        descriptions atomically.  Bit-identical to ``ingest`` over the
-        same records.  The loose ``executor=``/``monitor=``/``observe=``/
-        ``fused=`` kwargs remain accepted for one release with a
-        DeprecationWarning.
-
-        If another thread hot-swaps the live tree while the shards are
-        routing, the merged tightening is NOT silently published into the
-        outgoing generation: liveness is re-checked under the lock at
-        publish time, and a stale run returns its (still-valid) aggregates
-        with ``published=False, stale_generation=True``.
-
-        ``monitor`` (an :class:`~repro.service.drift.AutoRebuilder`) adds
-        the records to the monitor's reservoir and feeds it the run's
-        merged Eq. 1 window-stat partial — bit-identical to the
-        single-stream per-batch totals — as one observation.
-        """
-        from repro.engine.sharded import sharded_ingest
-
-        options = resolve_ingest_options(options, kw, "ingest_sharded")
-        live = self._live  # consistent engine/tree view for the whole run
-        monitor = options.monitor
-        if options.observe is not None:
-            kw["observe"] = options.observe
-        kw.setdefault("fused", options.fused)
-        if monitor is not None and "observe" not in kw:
-            observed = monitor.current_workload()
-            if observed is not None and len(observed):
-                kw["observe"] = observed
-        report = sharded_ingest(
-            live.engine, records, n_shards, batch=batch,
-            executor=options.executor, lock=self._lock,
-            publish_check=lambda: self._live is live, **kw,
+        """Deprecated spelling of ``ingest(records,
+        IngestOptions(shards=n_shards, batch=batch))`` — forwards there
+        (one release), then this method goes away."""
+        warnings.warn(
+            "ingest_sharded(records, n_shards, batch=...) is deprecated; "
+            "use ingest(records, IngestOptions(shards=..., batch=...))",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        if monitor is not None:
-            monitor.add_records(records)
-            if report.observation is not None:
-                monitor.observe(report.observation)
-        return report
+        options = resolve_ingest_options(options, kw, "ingest_sharded")
+        return self.ingest(
+            records,
+            dataclasses.replace(options, shards=n_shards, batch=batch),
+            **kw,
+        )
 
-    def auto_rebuilder(self, workload=None, config=None, **kw):
+    def apply_partial(self, state, expected=None) -> bool:
+        """Publish a merged :class:`~repro.engine.sharded.ShardState`
+        tightening into the live tree; returns True iff it landed.
+
+        The fleet-coordinator publish seam (``repro.coordinator``): fold
+        worker partials anywhere — other processes, other hosts — and
+        apply the merged aggregate here under the service lock, with the
+        same ``IncrementalTightener.apply`` + description-version bump a
+        local ``ingest`` run performs.  ``expected`` (a
+        :class:`LayoutVersion`, usually from :meth:`live_version` at
+        routing time) makes the publish a compare-and-check: if a rebuild
+        swapped the live tree while the partials were in flight, nothing
+        is mutated and False is returned — the exact stale-generation
+        discipline of ``ingest_sharded``.
+        """
+        from repro.engine.sharded import MergeCoordinator
+
+        with self._lock:
+            live = self._live
+            if expected is not None and live is not expected:
+                return False
+            if state.n_leaves != live.tree.n_leaves:
+                raise ValueError(
+                    f"partial has {state.n_leaves} leaves; live tree has "
+                    f"{live.tree.n_leaves} (built against another layout?)"
+                )
+            coordinator = MergeCoordinator(live.tree)
+            coordinator.add(state)
+            coordinator.publish()
+            return True
+
+    def auto_rebuilder(self, policy: RebuildPolicy, **kw):
         """An :class:`~repro.service.drift.AutoRebuilder` bound to this
         service: pass it as the ingest monitor and the service becomes
         self-optimizing — skip-rate drift past the configured policy
         triggers a background ``rebuild`` whose deployment rides the same
         compare-and-swap as manual rebuilds.
 
-        The typed spelling takes one :class:`RebuildPolicy`::
+        Takes one :class:`RebuildPolicy`::
 
             svc.auto_rebuilder(RebuildPolicy(workload="auto", tracker=t,
                                              drift=DriftConfig(...)))
 
         A policy with ``replicas > 1`` makes triggered rebuilds deploy a
         k-replica set (``rebuild_replicas``) instead of a single tree.
-        The loose ``auto_rebuilder(workload, config=, tracker=)`` kwargs
-        remain accepted for one release with a DeprecationWarning.
-
-        ``workload`` is either a declared standing
+        ``RebuildPolicy.workload`` is either a declared standing
         :class:`~repro.core.query.Workload` or the string ``"auto"``:
         then drift accounting and rebuilds score against the live mix a
         :class:`~repro.service.tracker.WorkloadTracker` inferred from the
-        serving path (pass ``tracker=`` to share the one :meth:`serve`
-        records into; omitted, a fresh :meth:`workload_tracker` is
-        created and exposed as ``rebuilder.tracker``).
+        serving path (``RebuildPolicy(tracker=...)`` shares the one
+        :meth:`serve` records into; omitted, a fresh
+        :meth:`workload_tracker` is created and exposed as
+        ``rebuilder.tracker``).  Remaining ``**kw`` (``reservoir=``,
+        ``on_event=``) forwards to ``AutoRebuilder.from_policy``.
         """
         from repro.service.drift import AutoRebuilder
 
-        if isinstance(workload, RebuildPolicy):
-            if config is not None:
-                raise TypeError(
-                    "config= does not combine with a RebuildPolicy; set "
-                    "RebuildPolicy(drift=...)"
-                )
-            return AutoRebuilder.from_policy(self, workload, **kw)
-        warnings.warn(
-            "auto_rebuilder(workload, config=, tracker=) is deprecated; "
-            "use auto_rebuilder(RebuildPolicy(workload=..., drift=..., "
-            "tracker=...))",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return AutoRebuilder(self, workload, config=config, **kw)
+        if not isinstance(policy, RebuildPolicy):
+            raise TypeError(
+                "auto_rebuilder takes a RebuildPolicy; the loose "
+                "auto_rebuilder(workload, config=, tracker=) kwargs were "
+                "removed after their deprecation release — use "
+                "RebuildPolicy(workload=..., drift=..., tracker=...)"
+            )
+        return AutoRebuilder.from_policy(self, policy, **kw)
 
     # -- lifecycle: swap / rollback / release --------------------------------
     def subscribe(self, listener: Callable[[LayoutVersion], None]) -> None:

@@ -742,6 +742,28 @@ class WorkloadTracker:
         with self._lock:
             return self.state.copy()
 
+    def drain_state(self) -> TrackerState:
+        """Take the accumulated sketch and reset this tracker to empty.
+
+        The worker-side half of the fleet fold: a serving worker records
+        locally, then periodically drains and ships the delta to the
+        coordinator (``FleetCoordinator.submit(tracker_state=...)``).
+        The drained state keeps its generation — ``merge`` aligns states
+        to the newer generation — so drain cadence cannot change the
+        folded bits: any partition of the recorded stream into deltas
+        merges to the same sketch as recording it all in one tracker.
+        """
+        with self._lock:
+            state = self.state
+            self.state = TrackerState(
+                decay=state.decay,
+                n_gens=state.n_gens,
+                n_buckets=state.n_buckets,
+                generation=state.generation,
+            )
+            self._version += 1
+            return state
+
     # -- inference -----------------------------------------------------------
     def infer_workload(
         self,

@@ -5,7 +5,11 @@ Run with different ``PYTHONHASHSEED`` values (tests/test_hash_determinism
 drives it); the printed sha256 must be identical across seeds — str-keyed
 set/dict iteration order is exactly what hash randomization perturbs, and
 these outputs cross process boundaries in the spawn-worker fleet, where
-every worker gets its own seed.
+every worker gets its own seed.  Covers the raw merge monoids (ShardState,
+TrackerState, trace_delta, signature features) AND full
+coordinator-cadence folds: k ∈ {1, 2, 4, 8} worker partials arriving in
+permuted orders, folded into a live service's descriptions and fleet
+tracker sketch.
 """
 
 import hashlib
@@ -108,6 +112,58 @@ def main() -> None:
         for sid, rows in folded.chunks[bid]:
             h.update(repr((bid, sid)).encode())
             h.update(np.ascontiguousarray(rows).tobytes())
+
+    # 5. coordinator-cadence folds: k worker partials + tracker deltas
+    # arriving in an uneven (permuted) order, folded on an off-k cadence
+    # into a real service — the published descriptions and the fleet
+    # tracker sketch are the bytes that cross the fleet
+    from repro.coordinator import FleetCoordinator
+    from repro.data import datagen, workload as wl
+    from repro.engine import LayoutEngine, replicate_tree
+    from repro.engine.sharded import ShardIngestor, micro_batches
+    from repro.service import LayoutService, build_layout
+
+    schema5, records5 = datagen.make_tpch_like(1500, seed=5)
+    work5, _ = wl.make_tpch_workload(schema5, n_per_template=2, seed=5)
+    cuts5 = work5.candidate_cuts(max_adv=4)
+
+    def worker_state(tree, rows):
+        eng = LayoutEngine(replicate_tree(tree), backend="numpy")
+        return ShardIngestor(eng, shard_id=0).run(micro_batches(rows, 97))
+
+    for k, cadence, order_seed in ((1, 1, 0), (2, 1, 1), (4, 3, 2),
+                                   (8, 5, 3)):
+        # prefix-built tree: the full stream genuinely tightens it
+        svc = LayoutService(build_layout(
+            records5[:700], work5, strategy="greedy", cuts=cuts5,
+            min_block=40, seed=5,
+        ))
+        coord = FleetCoordinator(svc, cadence=cadence)
+        workers = [coord.register(f"w{i}") for i in range(min(k, 3))]
+        states = [
+            worker_state(svc.tree, p) for p in np.array_split(records5, k)
+        ]
+        for j, i in enumerate(
+            np.random.default_rng(order_seed).permutation(k)
+        ):
+            t = svc.workload_tracker()
+            t.record(qry.Workload(
+                schema5, work5.queries[int(i) % len(work5.queries):][:2]
+            ))
+            coord.submit(
+                workers[j % len(workers)],
+                state=states[int(i)],
+                tracker_state=t.drain_state(),
+            )
+        if coord.stats()["pending"] or coord.stats()["pending_tracker"]:
+            coord.fold()
+        tree5 = svc.tree
+        for arr in (tree5.leaf_lo, tree5.leaf_hi, tree5.leaf_cat,
+                    tree5.leaf_adv):
+            h.update(np.ascontiguousarray(arr).tobytes())
+        h.update(
+            repr(coord.tracker.snapshot().top_signatures(16)).encode()
+        )
 
     print(h.hexdigest())
 

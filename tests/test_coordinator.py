@@ -1,0 +1,252 @@
+"""Fleet coordinator tests: cadence folds publish bit-identically to
+single-stream ingest, the fold commutes over arrival order and cadence
+partition, tracker deltas merge fleet-wide, stale-generation partials are
+dropped (never published), worker join/leave mid-stream, the
+apply_partial CAS against racing swaps, and the protocol's rejection of
+row-carrying states."""
+
+import dataclasses
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import query as qry
+from repro.coordinator import FleetCoordinator, FoldReport, WorkerHandle
+from repro.engine import LayoutEngine, replicate_tree
+from repro.engine.sharded import ShardIngestor, micro_batches
+from repro.service import IngestOptions, LayoutService, build_layout
+from tests.test_qdtree import small_setup
+from tests.test_query import random_query
+
+
+def _setup(seed=0, n_queries=8):
+    schema, records, cuts = small_setup(seed)
+    rng = np.random.default_rng(seed)
+    work = qry.Workload(
+        schema, tuple(random_query(schema, rng) for _ in range(n_queries))
+    )
+    return schema, records, cuts, work
+
+
+def _prefix_service(seed=0, backend="numpy", min_block=30):
+    """A service whose tree was built from a PREFIX of the records, so
+    ingesting the full stream genuinely tightens descriptions (a tree
+    built from the full records is already a tightening fixed point —
+    bit-identity assertions against it would be vacuous)."""
+    schema, records, cuts, work = _setup(seed)
+    build = build_layout(
+        records[: len(records) // 2], work, strategy="greedy", cuts=cuts,
+        min_block=min_block, seed=seed,
+    )
+    return schema, records, cuts, work, LayoutService(build)
+
+
+def _digest(tree):
+    h = hashlib.sha256()
+    for arr in (tree.leaf_lo, tree.leaf_hi, tree.leaf_cat, tree.leaf_adv):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _worker_state(tree, rows, batch=64, observe=None):
+    """What a fleet worker ships: route ``rows`` on a private replica,
+    return the aggregates-only ShardState."""
+    eng = LayoutEngine(replicate_tree(tree), backend="numpy")
+    probe = eng.observation_probe(observe) if observe is not None else None
+    return ShardIngestor(eng, shard_id=0, probe=probe).run(
+        micro_batches(rows, batch)
+    )
+
+
+def _single_stream_digest(tree, records, batch=64):
+    replica = replicate_tree(tree)
+    LayoutEngine(replica, backend="numpy").ingest(
+        micro_batches(records, batch)
+    )
+    return _digest(replica)
+
+
+# ---------------------------------------------------------------------------
+# The cadence fold: publish parity with single-stream ingest
+# ---------------------------------------------------------------------------
+def test_fold_publishes_bit_identical_to_single_stream():
+    _, records, _, _, svc = _prefix_service(3)
+    ref = _single_stream_digest(svc.tree, records)
+    before = _digest(svc.tree)
+    assert before != ref  # prefix-built: the stream has something to teach
+
+    coord = FleetCoordinator(svc, cadence=2)
+    a, b = coord.register("ingest-a"), coord.register("ingest-b")
+    halves = np.array_split(records, 2)
+    assert coord.submit(a, state=_worker_state(svc.tree, halves[0])) is None
+    rep = coord.submit(b, state=_worker_state(svc.tree, halves[1]))
+    assert isinstance(rep, FoldReport)
+    assert rep.published and rep.n_partials == 2 and rep.fold == 1
+    assert rep.n_records == len(records)
+    assert _digest(svc.tree) == ref
+    assert coord.stats()["folds"] == 1 and coord.stats()["pending"] == 0
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+@pytest.mark.parametrize("cadence", [1, 3])
+def test_fold_commutes_over_arrival_order_and_cadence(k, cadence):
+    """Any worker arrival order and any cadence partition of the same k
+    partials publishes bit-identical descriptions."""
+    _, records, _, _, svc = _prefix_service(5)
+    ref = _single_stream_digest(svc.tree, records)
+    parts = np.array_split(records, k)
+    states = [_worker_state(svc.tree, p) for p in parts]
+
+    order = np.random.default_rng(k * 31 + cadence).permutation(k)
+    coord = FleetCoordinator(svc, cadence=cadence)
+    w = coord.register()
+    for i in order:
+        coord.submit(w, state=states[int(i)])
+    if coord.stats()["pending"]:
+        coord.fold()  # flush the sub-cadence tail
+    assert _digest(svc.tree) == ref
+
+
+def test_coordinator_routed_service_ingest():
+    """ingest(records, IngestOptions(coordinator=)) routes and
+    aggregates locally but publishes only through the coordinator fold."""
+    import warnings
+
+    _, records, _, _, svc = _prefix_service(7)
+    ref = _single_stream_digest(svc.tree, records, batch=64)
+    before = _digest(svc.tree)
+    coord = FleetCoordinator(svc, cadence=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # thread-executor footgun
+        rep = svc.ingest(
+            records,
+            IngestOptions(shards=2, batch=64, executor="thread",
+                          coordinator=coord),
+        )
+    assert not rep.published  # the local publish was suppressed…
+    assert coord.stats()["folds"] == 1  # …the fold owned it
+    assert _digest(svc.tree) == ref != before
+
+
+# ---------------------------------------------------------------------------
+# Tracker deltas and the fleet rebuilder
+# ---------------------------------------------------------------------------
+def test_tracker_deltas_fold_fleet_wide():
+    schema, _, _, work, svc = _prefix_service(9)
+    coord = FleetCoordinator(svc, cadence=2)
+    a, b = coord.register(), coord.register()
+    t1, t2 = svc.workload_tracker(), svc.workload_tracker()
+    t1.record(qry.Workload(schema, work.queries[:4]))
+    t2.record(qry.Workload(schema, work.queries[4:]))
+    coord.submit(a, tracker_state=t1.drain_state())
+    rep = coord.submit(b, tracker_state=t2.drain_state())
+    assert rep is not None and rep.tracker_merges == 2
+    assert rep.n_partials == 0 and not rep.published
+    # drain is destructive worker-side; the fleet tracker has everything
+    assert not t1.snapshot().top_signatures(8)
+    fleet = coord.tracker.snapshot()
+    assert fleet.queries_seen == len(work.queries)
+
+
+def test_fold_feeds_fleet_rebuilder_the_merged_window():
+    class RecordingRebuilder:
+        def __init__(self):
+            self.observations = []
+
+        def observe(self, obs):
+            self.observations.append(obs)
+            return "decision"
+
+    _, records, _, work, svc = _prefix_service(11)
+    rb = RecordingRebuilder()
+    coord = FleetCoordinator(svc, cadence=2, rebuilder=rb)
+    w = coord.register()
+    halves = np.array_split(records, 2)
+    coord.submit(w, state=_worker_state(svc.tree, halves[0], observe=work))
+    rep = coord.submit(
+        w, state=_worker_state(svc.tree, halves[1], observe=work)
+    )
+    assert rep.drift == "decision"
+    (merged_obs,) = rb.observations
+    assert merged_obs.capacity > 0
+    assert merged_obs.n_records == len(records)
+
+
+# ---------------------------------------------------------------------------
+# Staleness, racing swaps, membership, protocol validation
+# ---------------------------------------------------------------------------
+def test_stale_generation_partials_are_dropped():
+    _, records, cuts, work, svc = _prefix_service(13)
+    coord = FleetCoordinator(svc, cadence=8)
+    w = coord.register()
+    old_gen = svc.generation
+    stale = _worker_state(svc.tree, records[:200])
+    svc.swap(build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=30, seed=99,
+    ))
+    coord.submit(w, state=stale, generation=old_gen)
+    rep = coord.fold()
+    assert rep.stale_partials == 1 and not rep.published
+    assert rep.n_records == 0
+    assert coord.stats()["stale_dropped"] == 1
+
+
+def test_apply_partial_cas_rejects_superseded_live_version():
+    """The publish CAS: a swap that lands between routing and fold makes
+    apply_partial refuse the merged partial (no silent mutation of either
+    the outgoing or the new live tree)."""
+    from repro.engine import plan as planlib
+
+    _, records, cuts, work, svc = _prefix_service(15)
+    live = svc.live_version()
+    state = _worker_state(svc.tree, records)
+    old_tree = svc.tree
+    v0 = planlib.desc_version(old_tree)
+    svc.swap(build_layout(
+        records, work, strategy="greedy", cuts=cuts, min_block=30, seed=42,
+    ))
+    assert svc.apply_partial(state, expected=live) is False
+    assert planlib.desc_version(old_tree) == v0  # untouched
+    # without an expectation the partial must still match the live shape
+    if svc.tree.n_leaves != old_tree.n_leaves:
+        with pytest.raises(ValueError):
+            svc.apply_partial(state)
+
+
+def test_worker_join_and_leave_mid_stream():
+    _, records, _, _, svc = _prefix_service(17)
+    ref = _single_stream_digest(svc.tree, records)
+    coord = FleetCoordinator(svc, cadence=8)
+    a = coord.register("early")
+    thirds = np.array_split(records, 3)
+    coord.submit(a, state=_worker_state(svc.tree, thirds[0]))
+    b = coord.register("late-joiner")  # joins mid-stream
+    assert {w.name for w in coord.workers()} == {"early", "late-joiner"}
+    coord.submit(b, state=_worker_state(svc.tree, thirds[1]))
+    coord.submit(a, state=_worker_state(svc.tree, thirds[2]))
+    coord.leave(a)  # leaves with partials still pending
+    assert [w.name for w in coord.workers()] == ["late-joiner"]
+    with pytest.raises(ValueError, match="unregistered"):
+        coord.submit(a, state=_worker_state(svc.tree, thirds[0]))
+    # the departed worker's pending partials are still valid aggregates
+    rep = coord.fold()
+    assert rep.published and rep.n_partials == 3
+    assert _digest(svc.tree) == ref
+
+
+def test_protocol_validation():
+    _, records, _, _, svc = _prefix_service(19)
+    with pytest.raises(ValueError, match="cadence"):
+        FleetCoordinator(svc, cadence=0)
+    coord = FleetCoordinator(svc, cadence=4)
+    w = coord.register()
+    with pytest.raises(ValueError, match="ShardState"):
+        coord.submit(w)  # neither state nor tracker delta
+    rows = records[:100]
+    chunky = dataclasses.replace(
+        _worker_state(svc.tree, rows), chunks={0: [(0, rows[:2])]}
+    )
+    with pytest.raises(ValueError, match="aggregates, not rows"):
+        coord.submit(w, state=chunky)
+    assert isinstance(w, WorkerHandle) and w.worker_id == 1

@@ -24,7 +24,9 @@ from repro.service import (
     AutoRebuilder,
     DriftConfig,
     DriftMonitor,
+    IngestOptions,
     LayoutService,
+    RebuildPolicy,
     RecordReservoir,
     build_layout,
 )
@@ -272,24 +274,26 @@ def test_auto_rebuilder_recovers_from_workload_shift():
         min_block=100,
     )
     gen0 = svc.generation
-    with svc.auto_rebuilder(
-        work_a,
-        config=DriftConfig(window=4, min_fill=2, abs_threshold=0.5,
-                           rel_degradation=None, hysteresis=2, cooldown=4),
+    with svc.auto_rebuilder(RebuildPolicy(
+        workload=work_a,
+        drift=DriftConfig(window=4, min_fill=2, abs_threshold=0.5,
+                          rel_degradation=None, hysteresis=2, cooldown=4),
         reservoir_capacity=4000,
         executor="sync",
         rebuild_kw=dict(min_block=100),
-    ) as rebuilder:
+    )) as rebuilder:
         def batches(rs):
             for s in range(0, rs.shape[0], 500):
                 yield rs[s : s + 500]
 
-        rep_a = svc.ingest(batches(records[:3000]), monitor=rebuilder)
+        rep_a = svc.ingest(
+            batches(records[:3000]), IngestOptions(monitor=rebuilder)
+        )
         assert rep_a.observation.scanned_fraction < 0.5
         assert svc.generation == gen0 and not rebuilder.events
 
         rebuilder.set_workload(work_b)  # the query distribution drifts
-        svc.ingest(batches(records[3000:]), monitor=rebuilder)
+        svc.ingest(batches(records[3000:]), IngestOptions(monitor=rebuilder))
         assert rebuilder.rebuilds_deployed == 1
         (event,) = [e for e in rebuilder.events if e.deployed]
         assert event.report.swapped and event.decision.triggered

@@ -4,9 +4,11 @@ The spawn-worker fleet gives every process its own ``PYTHONHASHSEED``;
 any merge or signature path that iterates a str-keyed set/dict in hash
 order would produce different bytes per worker and break the
 bit-identical fold contract.  This runs tests/_hash_seed_probe.py —
-k-way ShardState and TrackerState merges, replica ``signature_features``
-and ``trace_delta`` — in subprocesses under different seeds and asserts
-the digests match exactly.
+k-way ShardState and TrackerState merges, replica ``signature_features``,
+``trace_delta``, and coordinator-cadence folds (k ∈ {1, 2, 4, 8} worker
+partials in uneven arrival orders through a FleetCoordinator) — in
+subprocesses under different seeds and asserts the digests match
+exactly.
 """
 
 import os

@@ -1,9 +1,11 @@
 """Replica-set tests: k=1 bit-identity with the single-tree path
 (routing, serving, cache hits), cheapest-replica choice invariance under
 replica order permutation, per-replica cache invalidation and
-release/rollback semantics, the Epoch value type, and the typed
-IngestOptions/RebuildPolicy deprecation shim."""
+release/rollback semantics, the Epoch value type, and the unified
+IngestOptions surface (loose kwargs retired; ingest_sharded shim)."""
 
+
+import warnings
 
 import numpy as np
 import pytest
@@ -71,13 +73,9 @@ def test_epoch_value_type():
     assert e == Epoch(3, 7, 0)
     assert hash(e) == hash(Epoch(3, 7, 0))
     assert Epoch(2, 9, 0) < Epoch(3, 0, 0) < Epoch(3, 0, 1)
-    assert Epoch.of((3, 7)) == e  # legacy 2-tuple coercion
-    assert Epoch.of((3, 7, 2)) == Epoch(3, 7, 2)
-    assert Epoch.of(e) is e
-    with pytest.raises(ValueError):
-        Epoch.of((1,))
-    with pytest.raises(ValueError):
-        Epoch.of("nope")
+    # the legacy-tuple coercion had its release and is gone: every call
+    # site now passes real Epoch instances
+    assert not hasattr(Epoch, "of")
 
 
 def test_service_epochs_are_epoch_instances():
@@ -401,7 +399,7 @@ def test_rebuild_replicas_from_declared_workload():
 
 
 # ---------------------------------------------------------------------------
-# The deprecation shim: old kwargs accepted, warned, behavior-identical
+# The option-surface lifecycle: loose kwargs retired, ingest_sharded shims
 # ---------------------------------------------------------------------------
 def _batches(records, n=4):
     step = max(len(records) // n, 1)
@@ -409,50 +407,85 @@ def _batches(records, n=4):
         yield records[s : s + step]
 
 
-def test_ingest_loose_kwargs_warn_and_match_options():
-    _, records, _, _, svc_a = _service(17)
-    _, _, _, _, svc_b = _service(17)
-    with pytest.warns(DeprecationWarning, match=r"ingest\(fused=\)"):
-        rep_old = svc_a.ingest(_batches(records), fused=False)
-    rep_new = svc_b.ingest(
-        _batches(records), options=IngestOptions(fused=False)
+def _tree_bits(tree):
+    return tuple(
+        np.ascontiguousarray(a).tobytes()
+        for a in (tree.leaf_lo, tree.leaf_hi, tree.leaf_cat, tree.leaf_adv)
     )
-    assert rep_old.n_records == rep_new.n_records
-    assert rep_old.n_batches == rep_new.n_batches
 
 
-def test_ingest_rejects_options_plus_loose_kwargs():
-    _, records, _, _, svc = _service(18)
-    with pytest.raises(TypeError, match="both"):
+def test_ingest_loose_kwargs_are_rejected():
+    """The PR 8 one-release warning shim is retired: loose option kwargs
+    raise TypeError naming the typed spelling, with or without options."""
+    _, records, _, _, svc = _service(17)
+    for kw in (
+        dict(fused=False),
+        dict(observe=None, monitor=None),
+        dict(executor="thread"),
+        dict(shards=2),
+    ):
+        with pytest.raises(TypeError, match="IngestOptions"):
+            svc.ingest(_batches(records), **kw)
+    with pytest.raises(TypeError, match="IngestOptions"):
         svc.ingest(
             _batches(records), options=IngestOptions(fused=False),
             fused=True,
         )
 
 
-def test_ingest_sharded_executor_kwarg_warns():
+def test_ingest_sharded_shim_warns_and_forwards():
     _, records, _, _, svc = _service(19)
-    with pytest.warns(
-        DeprecationWarning, match=r"ingest_sharded\(executor=\)"
-    ):
-        rep = svc.ingest_sharded(records, 2, executor="thread")
-    assert rep.n_records == len(records)
+    with pytest.warns(DeprecationWarning, match="ingest_sharded.*deprecated"):
+        rep = svc.ingest_sharded(
+            records, 2, options=IngestOptions(executor="thread")
+        )
+    assert rep.n_records == len(records) and rep.n_shards == 2
 
 
-def test_auto_rebuilder_legacy_kwargs_warn():
+@settings(max_examples=8, deadline=None)
+@given(k=st.integers(2, 3), batch=st.integers(16, 96))
+def test_ingest_sharded_shim_matches_unified_ingest(k, batch):
+    """Property: the deprecated ingest_sharded spelling and the unified
+    ingest(records, IngestOptions(shards=, batch=)) produce bit-identical
+    trees and matching reports over the same inputs."""
+    schema, records, cuts, work = _setup(21)
+    opts = IngestOptions(shards=k, batch=batch, executor="thread")
+
+    def run(method):
+        svc = LayoutService.build(
+            records[: len(records) // 2], work, strategy="greedy",
+            cuts=cuts, backend="numpy", min_block=30,
+        )
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # shim + thread footgun
+            if method == "old":
+                rep = svc.ingest_sharded(records, k, batch=batch,
+                                         options=IngestOptions(
+                                             executor="thread"))
+            else:
+                rep = svc.ingest(records, opts)
+        return rep, _tree_bits(svc.tree)
+
+    rep_old, bits_old = run("old")
+    rep_new, bits_new = run("new")
+    assert bits_old == bits_new
+    assert rep_old.n_records == rep_new.n_records == len(records)
+    assert rep_old.n_batches == rep_new.n_batches
+    assert rep_old.n_shards == rep_new.n_shards == k
+    np.testing.assert_array_equal(rep_old.block_sizes, rep_new.block_sizes)
+
+
+def test_auto_rebuilder_requires_policy():
     _, _, _, work, svc = _service(20)
     cfg = DriftConfig(window=4, min_fill=2, abs_threshold=0.9)
-    with pytest.warns(DeprecationWarning, match="auto_rebuilder"):
-        rb_old = svc.auto_rebuilder(work, config=cfg)
-    assert rb_old.monitor.config is cfg
+    with pytest.raises(TypeError, match="RebuildPolicy"):
+        svc.auto_rebuilder(work, config=cfg)
     rb_new = svc.auto_rebuilder(
         RebuildPolicy(workload=work, drift=cfg, replicas=2, lam=0.5)
     )
     assert rb_new.monitor.config is cfg
     assert rb_new.policy.replicas == 2
     assert rb_new.policy.lam == 0.5
-    with pytest.raises(TypeError, match="does not combine"):
-        svc.auto_rebuilder(RebuildPolicy(workload=work), config=cfg)
 
 
 def test_rebuild_policy_validation():

@@ -30,7 +30,7 @@ from repro.serve import (
     ServeConfig,
     exact_signatures,
 )
-from repro.service import LayoutService, build_layout
+from repro.service import Epoch, LayoutService, build_layout
 from repro.service.tracker import query_from_signature
 from tests.test_qdtree import small_setup
 from tests.test_query import random_query
@@ -112,7 +112,7 @@ def test_exact_signature_recanonicalization_fixed_point(seed):
 # ---------------------------------------------------------------------------
 def test_result_cache_epoch_lifecycle():
     cache = ResultCache(capacity=8)
-    e1, e2 = (1, 0), (2, 0)
+    e1, e2 = Epoch(1, 0), Epoch(2, 0)
     bids = np.arange(3, dtype=np.int32)
 
     # puts before any activation are stale (no live epoch yet)
@@ -139,7 +139,7 @@ def test_result_cache_epoch_lifecycle():
 
 def test_result_cache_lru_eviction_and_get_many_parity():
     cache = ResultCache(capacity=2)
-    e = (1, 0)
+    e = Epoch(1, 0)
     cache.activate(e)
     for i in range(3):
         cache.put(e, (i,), np.array([i], np.int32))

@@ -19,13 +19,14 @@ from repro.data.blocks import BlockBuffers
 from repro.engine import LayoutEngine, replicate_tree, sharded_ingest
 from repro.engine.sharded import (
     MergeCoordinator,
+    PerformanceWarning,
     ShardIngestor,
     ShardState,
     micro_batches,
     shard_slices,
     states_bit_identical,
 )
-from repro.service import LayoutService
+from repro.service import IngestOptions, LayoutService
 from tests.test_qdtree import random_tree, small_setup
 from tests.test_query import random_query
 
@@ -224,7 +225,11 @@ def test_service_ingest_sharded_hot_publishes():
         min_block=30,
     )
     hits_before = svc.query_hits(work, backend="numpy")
-    rep = svc.ingest_sharded(records, 4, batch=97)
+    with pytest.warns(PerformanceWarning):  # thread executor, GIL-bound
+        rep = svc.ingest(
+            records,
+            IngestOptions(shards=4, batch=97, executor="thread"),
+        )
     rep2 = svc2.ingest(micro_batches(records, 97))
     assert rep.n_records == rep2.n_records == records.shape[0]
     np.testing.assert_array_equal(rep.block_sizes, rep2.block_sizes)
@@ -320,8 +325,10 @@ def test_service_ingest_sharded_detects_stale_generation():
     old_tree = svc.tree
     lo0, hi0 = old_tree.leaf_lo.copy(), old_tree.leaf_hi.copy()
     v0 = planlib.desc_version(old_tree)
-    rep = svc.ingest_sharded(
-        records, 3, batch=64, executor=SwapBetweenRouteAndPublish()
+    rep = svc.ingest(
+        records,
+        IngestOptions(shards=3, batch=64,
+                      executor=SwapBetweenRouteAndPublish()),
     )
     assert rep.stale_generation and not rep.published
     # neither the outgoing nor the new live tree was mutated…
@@ -335,7 +342,11 @@ def test_service_ingest_sharded_detects_stale_generation():
         rep.block_sizes, np.bincount(bids, minlength=old_tree.n_leaves)
     )
     # a run with no interference still publishes
-    rep2 = svc.ingest_sharded(records, 3, batch=64)
+    with pytest.warns(PerformanceWarning):
+        rep2 = svc.ingest(
+            records,
+            IngestOptions(shards=3, batch=64, executor="thread"),
+        )
     assert rep2.published and not rep2.stale_generation
 
 

@@ -29,7 +29,9 @@ from repro.core.query import AdvAtom, InAtom, Query, RangeAtom
 from repro.engine import LayoutEngine
 from repro.service import (
     DriftConfig,
+    IngestOptions,
     LayoutService,
+    RebuildPolicy,
     TrackerConfig,
     TrackerState,
     WorkloadTracker,
@@ -424,24 +426,26 @@ def test_auto_rebuilder_infers_the_shifted_mix_and_recovers():
     svc = _service(records[:2000], work_a)
     gen0 = svc.generation
     tracker = svc.workload_tracker(_cfg(n_buckets=256, n_gens=16))
-    with svc.auto_rebuilder(
-        "auto",
+    with svc.auto_rebuilder(RebuildPolicy(
+        workload="auto",
         tracker=tracker,
-        config=DriftConfig(window=4, min_fill=2, abs_threshold=0.5,
-                           rel_degradation=None, hysteresis=2, cooldown=4),
+        drift=DriftConfig(window=4, min_fill=2, abs_threshold=0.5,
+                          rel_degradation=None, hysteresis=2, cooldown=4),
         reservoir_capacity=4000,
         executor="sync",
         rebuild_kw=dict(min_block=100),
-    ) as rebuilder:
+    )) as rebuilder:
         assert rebuilder.tracker is tracker
         # nothing served yet: ingest runs unobserved (no drift signal)
-        rep = svc.ingest([records[:500]], monitor=rebuilder)
+        rep = svc.ingest([records[:500]], IngestOptions(monitor=rebuilder))
         assert rep.observation is None and not rebuilder.events
 
         # phase A: the live mix matches the tree — healthy window
         for s in range(500, 2000, 500):
             svc.serve(work_a, tracker=tracker)
-            rep = svc.ingest([records[s:s + 500]], monitor=rebuilder)
+            rep = svc.ingest(
+                [records[s:s + 500]], IngestOptions(monitor=rebuilder)
+            )
         assert rep.observation.scanned_fraction < 0.5
         assert svc.generation == gen0 and not rebuilder.events
 
@@ -449,7 +453,9 @@ def test_auto_rebuilder_infers_the_shifted_mix_and_recovers():
         # the monitor; it must notice from the serving path alone
         for s in range(2000, 4000, 500):
             svc.serve(work_b, tracker=tracker)
-            svc.ingest([records[s:s + 500]], monitor=rebuilder)
+            svc.ingest(
+                [records[s:s + 500]], IngestOptions(monitor=rebuilder)
+            )
         assert rebuilder.rebuilds_deployed == 1
         assert svc.generation > gen0
         (event,) = [e for e in rebuilder.events if e.deployed]
@@ -470,14 +476,17 @@ def test_auto_rebuilder_validation_and_empty_workload_skip():
     records, work_a, _ = _setup(2)
     svc = _service(records[:1000], work_a)
     with pytest.raises(ValueError):
-        svc.auto_rebuilder("magic")
+        svc.auto_rebuilder(RebuildPolicy(workload="magic"))
+    # the loose pre-policy kwargs are gone, not silently accepted
+    with pytest.raises(TypeError):
+        svc.auto_rebuilder("auto")
     # auto without an explicit tracker creates one from the service
-    reb = svc.auto_rebuilder(
-        "auto",
-        config=DriftConfig(window=1, min_fill=1, abs_threshold=0.1,
-                           rel_degradation=None, hysteresis=1, cooldown=0),
+    reb = svc.auto_rebuilder(RebuildPolicy(
+        workload="auto",
+        drift=DriftConfig(window=1, min_fill=1, abs_threshold=0.1,
+                          rel_degradation=None, hysteresis=1, cooldown=0),
         executor="sync",
-    )
+    ))
     assert reb.tracker is not None
     assert len(reb.current_workload()) == 0
     # a trigger with an empty inferred mix is skipped, not crashed
